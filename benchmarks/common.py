@@ -1,0 +1,47 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Benchmarks run on this CPU container; sizes are scaled down from the paper's
+Summit node where noted (each module records the scale factor in its output).
+Results are written as CSV rows (name, us_per_call, derived) plus per-figure
+data files under experiments/bench/.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def save(name: str, obj) -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{name}.json").write_text(json.dumps(obj, indent=1))
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)                    # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def trained_agent(n: int = 20, kind: str = "er", steps: int = 250,
+                  seed: int = 0, tau: int = 2, k: int = 16,
+                  lr: float = 1e-3):
+    """Train a small MVC agent (shared by several benchmarks)."""
+    from repro.core import Agent, PolicyConfig, train_agent
+    from repro.core.graphs import random_graph_batch
+    kw = {"rho": 0.15} if kind == "er" else {"d": 4}
+    train = random_graph_batch(kind, n, 8, seed=seed, **kw)
+    cfg = PolicyConfig(embed_dim=k, num_layers=2, minibatch=32,
+                       replay_capacity=5000, learning_rate=lr,
+                       eps_decay_steps=steps // 2)
+    agent = Agent(cfg, num_nodes=n)
+    train_agent(agent, train, episodes=10_000, tau=tau, eval_every=10 ** 9,
+                max_steps=steps, seed=seed)
+    return agent

@@ -1,0 +1,71 @@
+"""Roofline summary rows (deliverable g → harness CSV).
+
+Reads the dry-run JSON records produced by ``repro.launch.dryrun`` and
+emits one row per (arch × shape) with the three terms + dominant bottleneck,
+plus the §Perf before/after rows for the three hillclimbed pairs.
+Skips silently (with a note) if the dry-run has not been executed.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRY = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _load(name):
+    f = DRY / name
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def run(quick: bool = False):
+    rows = []
+    if not DRY.exists():
+        return [("roofline_summary", 0.0,
+                 "dry-run not executed; run repro.launch.dryrun --all")]
+    for f in sorted(DRY.glob("*__sp.json")):
+        r = json.loads(f.read_text())
+        if "workload" in r:           # papergraph records
+            t = r["roofline"]
+            rows.append((f"roofline_papergraph_n{r['nodes']}",
+                         t["step_time_bound_s"] * 1e6,
+                         f"dom={t['dominant'].replace('_s','')} "
+                         f"policy-eval bound on {r['chips']} chips"))
+            continue
+        if "skipped" in r:
+            rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                         f"SKIP: {r['skipped'][:60]}"))
+            continue
+        if "error" in r:
+            rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0, "ERROR"))
+            continue
+        t = r["roofline"]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}",
+            t["step_time_bound_s"] * 1e6,
+            f"dom={t['dominant'].replace('_s','')} "
+            f"c/m/x={t['compute_s']*1e3:.0f}/{t['memory_s']*1e3:.0f}/"
+            f"{t['collective_s']*1e3:.0f}ms useful={t['useful_flops_ratio']:.2f} "
+            f"temp={r['memory']['temp_bytes']/2**30:.1f}GiB"))
+
+    # §Perf hillclimb before/after (tagged records)
+    perf = [
+        ("rwkv6-7b", "train_4k", "sp", "sp__fsdp4", "FSDP layout"),
+        ("deepseek-v3-671b", "train_4k", "sp", "sp__q2048only",
+         "MLA-sharding fix + q2048 (allreduce MoE)"),
+        ("llama3-405b", "train_4k", "sp", "sp__fsdp_bf16m",
+         "FSDP + bf16 moments"),
+    ]
+    for arch, shape, base_tag, opt_tag, what in perf:
+        b = _load(f"{arch}__{shape}__{base_tag}.json")
+        o = _load(f"{arch}__{shape}__{opt_tag}.json")
+        if not (b and o) or "roofline" not in b or "roofline" not in o:
+            continue
+        tb = b["roofline"]["step_time_bound_s"]
+        to = o["roofline"]["step_time_bound_s"]
+        rows.append((f"perf_{arch}_{shape}", to * 1e6,
+                     f"{what}: bound {tb:.1f}s -> {to:.1f}s "
+                     f"({tb/max(to,1e-9):.2f}x)"))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
+
+  Fig 6  learning_speed       Fig 7  multinode_selection
+  Fig 8  gd_iterations        Fig 9/10/11  scaling
+  §5     efficiency_model     kernels  kernel_bench
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from . import (learning_speed, multinode_selection, gd_iterations,
+                   scaling, efficiency_model, kernel_bench,
+                   roofline_summary)
+    modules = {
+        "learning_speed": learning_speed,
+        "multinode_selection": multinode_selection,
+        "gd_iterations": gd_iterations,
+        "scaling": scaling,
+        "efficiency_model": efficiency_model,
+        "kernel_bench": kernel_bench,
+        "roofline_summary": roofline_summary,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules.items():
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=args.quick)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            print(f"{name},NaN,FAILED")
+            continue
+        for rname, us, derived in rows:
+            print(f'{rname},{us:.1f},"{derived}"', flush=True)
+        print(f"# {name} finished in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: solve Minimum Vertex Cover with the graph-RL framework.
+
+Trains a small agent for a minute on 20-node ER graphs, then solves unseen
+graphs and compares against the greedy heuristic and the exact optimum.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (Agent, PolicyConfig, train_agent, solve,
+                        evaluate_quality)
+from repro.core.graphs import random_graph_batch
+from repro.core.solvers import greedy_mvc, reference_sizes
+from repro.core.env import is_cover
+
+
+def main():
+    n = 20
+    train = random_graph_batch("er", n, 8, seed=0, rho=0.15)
+    test = random_graph_batch("er", n, 10, seed=100, rho=0.15)
+    refs = reference_sizes(test, exact_limit=24)
+
+    cfg = PolicyConfig(embed_dim=16, num_layers=2, minibatch=32,
+                       replay_capacity=5000, learning_rate=1e-3,
+                       eps_decay_steps=150)
+    agent = Agent(cfg, num_nodes=n)
+
+    print("before training: ratio =",
+          round(evaluate_quality(agent, test, refs), 3))
+    train_agent(agent, train, episodes=10 ** 6, tau=2, max_steps=300, seed=1)
+    print("after 300 steps : ratio =",
+          round(evaluate_quality(agent, test, refs), 3))
+
+    res = solve(agent.params, test, num_layers=cfg.num_layers,
+                multi_node=True)
+    assert np.asarray(is_cover(jnp.asarray(test),
+                               jnp.asarray(res.solution))).all()
+    greedy = np.array([greedy_mvc(a).sum() for a in test])
+    print(f"RL sizes     : {res.sizes.tolist()}")
+    print(f"greedy sizes : {greedy.tolist()}")
+    print(f"exact optima : {refs.tolist()}")
+    print(f"policy evals : {res.policy_evals} (adaptive top-d, vs ≤{n} for d=1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Spatial parallelism demo (paper §4.1 + Alg. 4): one graph's state
+partitioned across P devices.
+
+Run with forced host devices to see the P-way partitioned policy evaluation
+produce bit-identical scores to the single-device path:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/spatial_inference.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (PolicyConfig, init_policy, init_state,
+                        policy_scores, random_graph_batch, make_graph_mesh,
+                        spatial_scores_fn, shard_graph_arrays)
+from repro.core.analysis import collective_bytes_per_step
+
+
+def main():
+    p = len(jax.devices())
+    n, b = 64, 2
+    print(f"devices: {p} ({jax.devices()[0].platform})")
+    adj = random_graph_batch("er", n, b, seed=0, rho=0.15)
+    params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=32))
+    st = init_state(jnp.asarray(adj))
+
+    ref = policy_scores(params, st.adj, st.solution, st.candidate,
+                        num_layers=2)
+
+    mesh = make_graph_mesh(p)
+    scorer = spatial_scores_fn(mesh, num_layers=2)
+    a, s, c = shard_graph_arrays(mesh, st.adj, st.solution, st.candidate)
+    out = scorer(params, a, s, c)
+    diff = float(jnp.abs(ref - out).max())
+    print(f"P={p} spatially-partitioned scores vs single device: "
+          f"max|Δ| = {diff:.2e}")
+    per_dev = a.addressable_shards[0].data.shape
+    print(f"per-device adjacency block: {per_dev} "
+          f"(paper Fig. 2: B × N/P × N)")
+    cb = collective_bytes_per_step(b=b, n=n, k=32, l=2, p=p)
+    print("collectives per policy eval (paper §5.1):",
+          {k: f"{v:.0f}B" for k, v in cb.items()})
+
+
+if __name__ == "__main__":
+    main()

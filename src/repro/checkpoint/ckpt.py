@@ -1,0 +1,80 @@
+"""Checkpointing: flat-npz pytree snapshots with step indexing.
+
+No orbax dependency (offline container); the format is a single .npz per
+step holding every leaf under its tree path, plus a JSON treedef manifest.
+Works for model params, optimizer state, and the RL agent's replay-free
+state alike.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+from typing import Any, Optional, Tuple
+
+import numpy as np
+import jax
+
+
+def _flatten(tree: Any):
+    """npz-safe flattening: bfloat16 (not a native numpy dtype) is stored as
+    a uint16 view; the true dtypes travel in a JSON manifest entry."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out, dtypes = {}, {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    out["__dtypes__"] = np.frombuffer(
+        json.dumps(dtypes).encode(), dtype=np.uint8)
+    return out, treedef
+
+
+def save_checkpoint(directory: str | pathlib.Path, step: int, tree: Any,
+                    *, keep: int = 3) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    path = directory / f"ckpt_{step:08d}.npz"
+    np.savez(path, **flat)
+    # retention
+    ckpts = sorted(directory.glob("ckpt_*.npz"))
+    for old in ckpts[:-keep]:
+        old.unlink()
+    return path
+
+
+def latest_step(directory: str | pathlib.Path) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    ckpts = sorted(directory.glob("ckpt_*.npz"))
+    if not ckpts:
+        return None
+    return int(re.search(r"ckpt_(\d+)", ckpts[-1].name).group(1))
+
+
+def restore_checkpoint(directory: str | pathlib.Path, template: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (an abstract or concrete
+    pytree).  Returns (tree, step)."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    data = np.load(directory / f"ckpt_{step:08d}.npz")
+    dtypes = json.loads(bytes(data["__dtypes__"]).decode()) \
+        if "__dtypes__" in data else {}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        arr = data[key]
+        if dtypes.get(key) == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        dtype = getattr(leaf, "dtype", arr.dtype)
+        out.append(jax.numpy.asarray(arr).astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), step

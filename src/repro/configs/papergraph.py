@@ -1,0 +1,7 @@
+"""The paper's own workload: structure2vec policy (K=32, L=2) over MVC
+graphs — hyper-parameters of OpenGraphGym-MG §6.1."""
+from ..core.policy import PolicyConfig
+
+CONFIG = PolicyConfig(embed_dim=32, num_layers=2, gamma=0.9,
+                      learning_rate=1e-5, replay_capacity=50_000,
+                      eps_start=0.9, eps_end=0.1)

@@ -1,0 +1,18 @@
+"""OpenGraphGym-MG core: the paper's contribution in JAX.
+
+Spatially-partitioned graph RL — structure2vec embedding (Alg. 2), action
+evaluation (Alg. 3), parallel inference (Alg. 4), parallel training (Alg. 5),
+compressed replay (§4.4), adaptive multi-node selection + τ GD iterations
+(§4.5), analytic models (§5).
+"""
+from .graphs import (GraphState, init_state, residual_adjacency, erdos_renyi,
+                     barabasi_albert, social_like, random_graph_batch)
+from .policy import PolicyConfig, PolicyParams, init_policy, policy_scores
+from .s2v import S2VParams, init_s2v, embed_local, embed_full
+from .qmodel import QParams, init_q, scores_local
+from .agent import Agent, candidate_mask
+from .replay import ReplayBuffer, tuples_to_graphs
+from .inference import solve, adaptive_d, InferenceResult
+from .training import train_agent, evaluate_quality, TrainLog
+from .spatial import make_graph_mesh, spatial_scores_fn, shard_graph_arrays
+from . import env, solvers, analysis

@@ -1,0 +1,154 @@
+"""Graph Learning Agent (paper Fig. 1, Alg. 1): epsilon-greedy deep-Q agent
+over the combined structure2vec + action-evaluation policy.
+
+Training follows Alg. 5: targets are computed at experience-insertion time
+(``target = reward + γ·max_v Q(s', v)``, line 12), tuples are stored
+compressed, and each env step runs τ gradient-descent iterations (§4.5.2)
+over minibatches re-materialized by Tuples2Graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .graphs import GraphState
+from .policy import PolicyConfig, PolicyParams, init_policy, policy_scores
+from .qmodel import NEG_INF
+from .replay import ReplayBuffer, tuples_to_graphs
+from ..optim import AdamState, adam_init, adam_update
+
+
+def candidate_mask(adj: jax.Array, solution: jax.Array) -> jax.Array:
+    deg = adj.sum(-1)
+    return ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_layers",))
+def greedy_action(params: PolicyParams, adj, sol, cand, *, num_layers: int):
+    """argmax_v Q(s, v) over candidates (exploit path of Alg. 1 line 10)."""
+    s = policy_scores(params, adj, sol, cand, num_layers=num_layers)
+    return jnp.argmax(s, axis=-1), s
+
+
+@functools.partial(jax.jit, static_argnames=("num_layers",))
+def max_q(params: PolicyParams, adj, sol, cand, *, num_layers: int):
+    s = policy_scores(params, adj, sol, cand, num_layers=num_layers)
+    has_cand = cand.sum(-1) > 0
+    return jnp.where(has_cand, s.max(-1), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_layers",), donate_argnums=(0, 1))
+def _train_minibatch(params: PolicyParams, opt: AdamState, adj, sol, cand,
+                     action, target, *, num_layers: int, lr: float):
+    def loss_fn(p):
+        s = policy_scores(p, adj, sol, cand, num_layers=num_layers,
+                          masked=False)
+        qsa = jnp.take_along_axis(s, action[:, None], axis=-1)[:, 0]
+        return jnp.mean(jnp.square(qsa - target))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt = adam_update(params, grads, opt, lr=lr)
+    return params, opt, loss
+
+
+@dataclasses.dataclass
+class Agent:
+    """Host-side agent driver (episodes/replay are host logic, everything
+    numerical is jitted and device-resident)."""
+    cfg: PolicyConfig
+    num_nodes: int
+    params: PolicyParams = None
+    opt: AdamState = None
+    replay: ReplayBuffer = None
+    step_count: int = 0
+    target_mode: str = "fresh"          # "fresh" | "stored" (paper Alg. 5)
+
+    def __post_init__(self):
+        if self.params is None:
+            self.params = init_policy(jax.random.key(0), self.cfg)
+        if self.opt is None:
+            self.opt = adam_init(self.params)
+        if self.replay is None:
+            self.replay = ReplayBuffer(self.cfg.replay_capacity, self.num_nodes)
+        self._rng = np.random.default_rng(0)
+
+    # -- acting ------------------------------------------------------------
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(1.0, self.step_count / max(1, c.eps_decay_steps))
+        return c.eps_start + (c.eps_end - c.eps_start) * frac
+
+    def act(self, state: GraphState, explore: bool = True) -> np.ndarray:
+        """Batched epsilon-greedy action (Alg. 1 lines 9-10)."""
+        b, n = state.candidate.shape
+        greedy, _ = greedy_action(self.params, state.adj, state.solution,
+                                  state.candidate, num_layers=self.cfg.num_layers)
+        greedy = np.asarray(greedy)
+        if not explore:
+            return greedy
+        eps = self.epsilon()
+        cand = np.asarray(state.candidate)
+        out = greedy.copy()
+        for i in range(b):
+            if self._rng.random() < eps:
+                choices = np.nonzero(cand[i] > 0.5)[0]
+                if len(choices):
+                    out[i] = self._rng.choice(choices)
+        return out
+
+    # -- remembering ---------------------------------------------------------
+    def remember(self, graph_idx, prev_state: GraphState, action,
+                 reward, next_state: GraphState, done) -> None:
+        """Store compressed tuples.
+
+        ``target_mode="stored"`` computes the TD target now (paper Alg. 5
+        line 12, verbatim); ``"fresh"`` (default) stores (r, S', done) —
+        still O(N) per tuple — and bootstraps with CURRENT params at
+        training time, which is markedly more stable at practical learning
+        rates (EXPERIMENTS.md §Paper-claims notes the deviation).
+        """
+        if self.target_mode == "stored":
+            nxt = max_q(self.params, next_state.adj, next_state.solution,
+                        next_state.candidate, num_layers=self.cfg.num_layers)
+            target = np.asarray(reward) + self.cfg.gamma * np.asarray(nxt) * (
+                1.0 - np.asarray(done, np.float32))
+        else:
+            target = np.zeros_like(np.asarray(reward))
+        self.replay.push_batch(graph_idx, np.asarray(prev_state.solution),
+                               action, target, reward=np.asarray(reward),
+                               next_solution=np.asarray(next_state.solution),
+                               done=np.asarray(done))
+
+    # -- training -----------------------------------------------------------
+    def train(self, adj_stack: jnp.ndarray, tau: Optional[int] = None
+              ) -> float:
+        """τ gradient-descent iterations on sampled minibatches (§4.5.2)."""
+        tau = self.cfg.grad_iters if tau is None else tau
+        if self.replay.size < self.cfg.minibatch:
+            return float("nan")
+        loss = float("nan")
+        for _ in range(tau):
+            gi, sol, act, tgt, rew, sol2, done = self.replay.sample(
+                self.cfg.minibatch, self._rng)
+            if self.target_mode == "fresh":
+                adj2 = tuples_to_graphs(adj_stack, gi, sol2)
+                sol2_j = jnp.asarray(sol2)
+                cand2 = candidate_mask(adj2, sol2_j)
+                nxt = max_q(self.params, adj2, sol2_j, cand2,
+                            num_layers=self.cfg.num_layers)
+                tgt = rew + self.cfg.gamma * np.asarray(nxt) * (1.0 - done)
+            adj = tuples_to_graphs(adj_stack, gi, sol)
+            sol_j = jnp.asarray(sol)
+            cand = candidate_mask(adj, sol_j)
+            self.params, self.opt, l = _train_minibatch(
+                self.params, self.opt, adj, sol_j, cand,
+                jnp.asarray(act), jnp.asarray(tgt),
+                num_layers=self.cfg.num_layers, lr=self.cfg.learning_rate)
+            loss = float(l)
+        self.step_count += 1
+        return loss

@@ -1,0 +1,96 @@
+"""Analytic performance + memory models (paper §5, Eq. 3-7 and §5.2).
+
+Implemented verbatim so benchmarks can evaluate the paper's own scaling
+claims at its experimental sizes, and compare against collective-byte counts
+extracted from compiled HLO (repro.roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    alpha: float = 5e-6    # latency (s) — Summit NVLink-ish default
+    beta: float = 1 / 50e9  # reciprocal bandwidth (s/B)
+
+
+def t_embed(b, n, rho, k, l, p, net: NetworkModel = NetworkModel(),
+            flop_rate: float = 7.8e12) -> float:
+    """Eq. 3: parallel embedding-evaluation time on P devices (seconds).
+
+    The paper's expression counts scalar operations; divide by a device
+    flop rate to get seconds.
+    """
+    compute = (n * n / p) * (b * k * (rho + l) + b * k * (2 + k + 4 * l) / n)
+    comm = net.alpha * l * math.log2(max(p, 2)) + net.beta * l * b * k * n * 4
+    return compute / flop_rate + (comm if p > 1 else 0.0)
+
+
+def t_embed_seq(b, n, rho, k, l, flop_rate: float = 7.8e12) -> float:
+    """Eq. 4."""
+    return (n * n) * (b * k * (rho + l) + b * k * (2 + k + 4 * l) / n) / flop_rate
+
+
+def efficiency_embed(b, n, rho, k, l, p, net: NetworkModel = NetworkModel(),
+                     flop_rate: float = 7.8e12) -> float:
+    """E = (T_par(P) / (T_seq / P))^-1 — paper: ≈1 when P ≪ N."""
+    return (t_embed_seq(b, n, rho, k, l, flop_rate) / p) / t_embed(
+        b, n, rho, k, l, p, net, flop_rate)
+
+
+def t_action(b, n, k, p, net: NetworkModel = NetworkModel(),
+             flop_rate: float = 7.8e12) -> float:
+    """Eq. 5."""
+    compute = (b * k * n / p) * (6 + k + k * p / n)
+    comm = net.alpha * math.log2(max(p, 2)) + net.beta * b * k * 4
+    return compute / flop_rate + (comm if p > 1 else 0.0)
+
+
+def t_action_seq(b, n, k, flop_rate: float = 7.8e12) -> float:
+    """Eq. 6."""
+    return b * k * n * (6 + k + k / n) / flop_rate
+
+
+def efficiency_action(b, n, k, p, net: NetworkModel = NetworkModel(),
+                      flop_rate: float = 7.8e12) -> float:
+    """Eq. 7: ≈ (1 + P/(cN+1) + β/(N(K+6)))^-1 ≈ 1 for N ≫ P."""
+    return (t_action_seq(b, n, k, flop_rate) / p) / t_action(
+        b, n, k, p, net, flop_rate)
+
+
+def efficiency_embed_closed(n, p, beta_ops: float = 4.0, l: int = 2) -> float:
+    """Paper's closed form under Eq. 3/4: E ≈ (1 + βP/(N(1+ρ/P)))⁻¹ with β in
+    op-equivalent units; → 1 when P ≪ N."""
+    return 1.0 / (1.0 + beta_ops * p / n)
+
+
+def efficiency_action_closed(n, k, p, beta_ops: float = 4.0) -> float:
+    """Paper Eq. 7: E = (1 + P/(cN+1) + β/(N(K+6)))⁻¹, c = (K+6)/K."""
+    c = (k + 6) / k
+    return 1.0 / (1.0 + p / (c * n + 1) + beta_ops / (n * (k + 6)))
+
+
+def memory_per_device(b, n, rho, p, replay_tuples: int = 0) -> dict:
+    """§5.2: COO adjacency 20·N²ρ·B/P, masks 4NB/P each,
+    replay 8R(N/P + 1) bytes."""
+    return {
+        "adjacency_bytes": 20.0 * n * n * rho * b / p,
+        "solution_bytes": 4.0 * n * b / p,
+        "candidate_bytes": 4.0 * n * b / p,
+        "replay_bytes": 8.0 * replay_tuples * (n / p + 1),
+    }
+
+
+def collective_bytes_per_step(b, n, k, l, p) -> dict:
+    """Paper's stated collectives: L all-reduces of B×K×N (embedding), one
+    all-reduce of B×K (action eval), one all-gather of N/P scores per device
+    (inference), one gradient all-reduce of 4K²+4K (training)."""
+    f = 4  # float32
+    return {
+        "embed_allreduce_bytes": l * b * k * n * f,
+        "action_allreduce_bytes": b * k * f,
+        "score_allgather_bytes": b * n * f,
+        "grad_allreduce_bytes": (4 * k * k + 4 * k) * f,
+    }

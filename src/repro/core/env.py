@@ -1,0 +1,105 @@
+"""Graph learning environments (paper §3, Fig 1).
+
+Functional, fully on-device environments: ``step(state, action) -> (state,
+reward, done)``.  The paper runs the env on host CPUs next to each GPU; on TPU
+we keep it on-device (the update is a masked row/column zeroing — pure VPU
+work) to avoid host round-trips per RL step.  This is a documented hardware
+adaptation (DESIGN.md §2).
+
+Environments are registered by name so users can plug in new graph problems
+(the paper's extensibility claim).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graphs import GraphState, init_state
+
+
+EnvStep = Callable[[GraphState, jax.Array], Tuple[GraphState, jax.Array, jax.Array]]
+
+_REGISTRY: Dict[str, EnvStep] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def make(name: str) -> EnvStep:
+    return _REGISTRY[name]
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+def _onehot(v: jax.Array, n: int) -> jax.Array:
+    return jax.nn.one_hot(v, n, dtype=jnp.float32)
+
+
+@register("mvc")
+def mvc_step(state: GraphState, action: jax.Array):
+    """Minimum Vertex Cover step (paper §4, Fig 3/4).
+
+    action: (B,) int32 node ids.  Adds the node to the partial solution,
+    removes it from candidates, zeroes its row+column in the residual
+    adjacency.  Reward is -1 per selected node (minimize |S|); done when no
+    edges remain.
+    """
+    b, n = state.candidate.shape
+    oh = _onehot(action, n)                                 # (B, N)
+    solution = jnp.maximum(state.solution, oh)
+    keep = 1.0 - oh
+    adj = state.adj * keep[:, :, None] * keep[:, None, :]
+    # candidates: not in solution and still incident to an uncovered edge
+    deg = adj.sum(-1)
+    candidate = ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
+    reward = -jnp.ones((b,), jnp.float32)
+    done = adj.sum((-1, -2)) == 0
+    return GraphState(adj=adj, candidate=candidate, solution=solution), reward, done
+
+
+@register("maxcut")
+def maxcut_step(state: GraphState, action: jax.Array):
+    """Maximum Cut step (second environment, demonstrating extensibility —
+    the paper cites MaxCut as the canonical sibling problem [24]).
+
+    Moving node v into set S gains (edges to V\\S) - (edges already cut to S).
+    ``adj`` stays the original adjacency (cut does not delete edges);
+    candidates are all nodes not yet in S.  done when no move has positive
+    gain — approximated here as "all nodes assigned" for fixed-horizon RL;
+    the agent's reward signal handles quality.
+    """
+    b, n = state.candidate.shape
+    oh = _onehot(action, n)
+    in_s = state.solution
+    # gain = deg_to_other_side - deg_to_same_side for the chosen node
+    nbrs = jnp.einsum("bn,bnm->bm", oh, state.adj)          # (B, N) neighbors of v
+    to_s = (nbrs * in_s).sum(-1)
+    to_out = (nbrs * (1.0 - in_s)).sum(-1)
+    reward = to_out - to_s
+    solution = jnp.maximum(in_s, oh)
+    candidate = jnp.clip(state.candidate - oh, 0.0, 1.0)
+    done = candidate.sum(-1) == 0
+    return GraphState(adj=state.adj, candidate=candidate, solution=solution), reward, done
+
+
+def reset(adj) -> GraphState:
+    return init_state(adj)
+
+
+def solution_size(state: GraphState) -> jax.Array:
+    return state.solution.sum(-1)
+
+
+def is_cover(adj0: jax.Array, solution: jax.Array) -> jax.Array:
+    """Check the MVC invariant: every original edge touches a solution node."""
+    keep = 1.0 - solution
+    uncovered = adj0 * keep[..., :, None] * keep[..., None, :]
+    return uncovered.sum((-1, -2)) == 0

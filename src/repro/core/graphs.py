@@ -1,0 +1,183 @@
+"""Graph generation and distributed graph containers (paper §4.1).
+
+The paper stores each graph as (A, C, S): adjacency matrix, candidate-node
+mask, partial-solution mask — spatially partitioned row-wise across P devices.
+On TPU we keep dense (B, N, N) adjacency blocks (MXU-friendly) for the policy
+model and provide a padded edge-list ("CSR-like") representation that retains
+the paper's sparse-storage memory win for very large graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Generators (paper §6.1: ER(n, rho=0.15), BA(n, d=4), real-world Facebook
+# graphs).  Pure numpy + explicit seeding so training is reproducible.
+# ---------------------------------------------------------------------------
+
+def erdos_renyi(n: int, rho: float = 0.15, *, seed: int) -> np.ndarray:
+    """ER(n, rho): each unordered pair connected with probability rho."""
+    rng = np.random.default_rng(seed)
+    upper = rng.random((n, n)) < rho
+    upper = np.triu(upper, k=1)
+    a = (upper | upper.T).astype(np.float32)
+    return a
+
+
+def barabasi_albert(n: int, d: int = 4, *, seed: int) -> np.ndarray:
+    """BA(n, d): preferential attachment, d edges per new node (paper d=4)."""
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), dtype=np.float32)
+    # seed clique of d+1 nodes
+    m0 = min(d + 1, n)
+    for i in range(m0):
+        for j in range(i + 1, m0):
+            a[i, j] = a[j, i] = 1.0
+    degrees = a.sum(axis=1)
+    for v in range(m0, n):
+        # preferential attachment: sample d distinct targets ∝ degree
+        probs = degrees[:v] / degrees[:v].sum()
+        targets = rng.choice(v, size=min(d, v), replace=False, p=probs)
+        for t in targets:
+            a[v, t] = a[t, v] = 1.0
+        degrees = a.sum(axis=1)
+    return a
+
+
+def social_like(n: int, communities: int = 8, p_in: float = 0.08,
+                p_out: float = 0.002, *, seed: int) -> np.ndarray:
+    """Stochastic-block-model stand-in for the paper's Facebook graphs
+    (Vanderbilt/Georgetown/Mississippi are not redistributable offline;
+    SBM with strong communities reproduces their low edge probability
+    ~0.01 and clustered structure)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, communities, size=n)
+    same = labels[:, None] == labels[None, :]
+    p = np.where(same, p_in, p_out)
+    upper = np.triu(rng.random((n, n)) < p, k=1)
+    return (upper | upper.T).astype(np.float32)
+
+
+def random_graph_batch(kind: str, n: int, batch: int, *, seed: int,
+                       **kw) -> np.ndarray:
+    gen = {"er": erdos_renyi, "ba": barabasi_albert, "social": social_like}[kind]
+    return np.stack([gen(n, seed=seed + i, **kw) for i in range(batch)])
+
+
+def edge_count(a: np.ndarray) -> int:
+    return int(a.sum() / 2)
+
+
+# ---------------------------------------------------------------------------
+# Dense graph state (B graphs stacked; paper Fig 2).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphState:
+    """State of a batch of B graphs with N nodes each.
+
+    adj:       (B, N, N) float — residual adjacency (edges already covered by
+               the partial solution are zeroed, paper Fig 4 right panel).
+    candidate: (B, N) float mask — the paper's C vector.
+    solution:  (B, N) float mask — the paper's S vector.
+    """
+    adj: jax.Array
+    candidate: jax.Array
+    solution: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.adj.shape[-1]
+
+
+def init_state(adj: jax.Array) -> GraphState:
+    """Fresh state: empty solution; candidates = nodes with degree > 0."""
+    adj = jnp.asarray(adj, jnp.float32)
+    if adj.ndim == 2:
+        adj = adj[None]
+    deg = adj.sum(-1)
+    return GraphState(
+        adj=adj,
+        candidate=(deg > 0).astype(jnp.float32),
+        solution=jnp.zeros(adj.shape[:2], jnp.float32),
+    )
+
+
+def residual_adjacency(adj0: jax.Array, solution: jax.Array) -> jax.Array:
+    """Tuples2Graphs (paper Alg 5 line 21): rebuild the residual subgraph from
+    the *original* adjacency and a partial-solution mask.  Removing a node
+    zeroes its row and column, i.e. A ⊙ (1-S)(1-S)ᵀ."""
+    keep = 1.0 - solution
+    return adj0 * keep[..., :, None] * keep[..., None, :]
+
+
+# ---------------------------------------------------------------------------
+# Spatially partitioned view (paper §4.1): row-block of A plus local C/S.
+# Used by repro.core.spatial inside shard_map; each device sees the block
+# for its N/P resident nodes.
+# ---------------------------------------------------------------------------
+
+def pad_nodes(a: np.ndarray, p: int) -> np.ndarray:
+    """Pad node count up to a multiple of p (isolated padding nodes — they
+    have degree 0 so they are never candidates and never affect MVC)."""
+    n = a.shape[-1]
+    n_pad = (-n) % p
+    if n_pad == 0:
+        return a
+    widths = [(0, 0)] * (a.ndim - 2) + [(0, n_pad), (0, n_pad)]
+    return np.pad(a, widths)
+
+
+# ---------------------------------------------------------------------------
+# Padded edge-list ("CSR-like") sparse storage — the memory-saving
+# representation for big graphs (paper §5.2 counts 20·N²ρ/P bytes for COO;
+# padded edge lists cost 4·N·maxdeg/P and are TPU-gatherable).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PaddedEdgeList:
+    """neighbors: (N, max_deg) int32, padded with N (a sentinel row);
+    valid: (N, max_deg) bool."""
+    neighbors: np.ndarray
+    valid: np.ndarray
+
+    @property
+    def num_nodes(self) -> int:
+        return self.neighbors.shape[0]
+
+    def nbytes(self) -> int:
+        return self.neighbors.nbytes + self.valid.nbytes
+
+
+def to_padded_edgelist(a: np.ndarray, max_deg: Optional[int] = None) -> PaddedEdgeList:
+    n = a.shape[-1]
+    deg = a.sum(-1).astype(np.int64)
+    md = int(deg.max()) if max_deg is None else max_deg
+    nbr = np.full((n, md), n, dtype=np.int32)
+    val = np.zeros((n, md), dtype=bool)
+    for v in range(n):
+        idx = np.nonzero(a[v])[0][:md]
+        nbr[v, : len(idx)] = idx
+        val[v, : len(idx)] = True
+    return PaddedEdgeList(nbr, val)
+
+
+def edgelist_to_dense(e: PaddedEdgeList) -> np.ndarray:
+    n = e.num_nodes
+    a = np.zeros((n, n), dtype=np.float32)
+    rows = np.repeat(np.arange(n), e.neighbors.shape[1])
+    cols = e.neighbors.reshape(-1)
+    mask = e.valid.reshape(-1)
+    a[rows[mask], cols[mask]] = 1.0
+    return a

@@ -1,0 +1,69 @@
+"""The RL agent's combined policy model: EM (structure2vec) followed by Q
+(action evaluation) — paper §4.2, "the two models are connected into one
+combined model" so both are trained jointly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .s2v import S2VParams, init_s2v, embed_local
+from .qmodel import QParams, init_q, scores_local
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PolicyParams:
+    em: S2VParams
+    q: QParams
+
+    @property
+    def dim(self) -> int:
+        return self.em.dim
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Paper §6.1 hyper-parameter settings."""
+    embed_dim: int = 32          # K
+    num_layers: int = 2          # L
+    gamma: float = 0.9           # discount
+    learning_rate: float = 1e-5
+    replay_capacity: int = 50_000
+    eps_start: float = 0.9
+    eps_end: float = 0.1
+    eps_decay_steps: int = 500
+    minibatch: int = 64          # B tuples per GD iteration
+    grad_iters: int = 1          # τ (paper §4.5.2)
+
+
+def init_policy(key: jax.Array, cfg: PolicyConfig) -> PolicyParams:
+    k1, k2 = jax.random.split(key)
+    return PolicyParams(em=init_s2v(k1, cfg.embed_dim),
+                        q=init_q(k2, cfg.embed_dim))
+
+
+def num_params(cfg: PolicyConfig) -> int:
+    """4K² + 4K — the gradient all-reduce payload (paper §5.1(3))."""
+    k = cfg.embed_dim
+    return 4 * k * k + 4 * k
+
+
+def policy_scores(
+    params: PolicyParams,
+    adj_local: jax.Array,      # (B, Nl, N)
+    sol_local: jax.Array,      # (B, Nl)
+    cand_local: jax.Array,     # (B, Nl)
+    *,
+    num_layers: int,
+    axis: Optional[str] = None,
+    masked: bool = True,
+    mp_impl=None,
+) -> jax.Array:
+    """Q(EM(Aᶦ, Sᶦ), Cᶦ): (B, Nl) masked scores of local candidates."""
+    emb = embed_local(params.em, adj_local, sol_local,
+                      num_layers=num_layers, axis=axis, mp_impl=mp_impl)
+    return scores_local(params.q, emb, cand_local, axis=axis, masked=masked)

@@ -1,0 +1,90 @@
+"""Compressed experience replay buffer (paper §4.4, 'Optimization of Replay
+Buffer to Reduce Memory Cost').
+
+Each tuple stores only ``(graph index, partial-solution bitmask S, action v_t,
+target value)`` — never the adjacency matrix.  ``tuples_to_graphs``
+(Tuples2Graphs, Alg. 5 line 21) re-materializes the residual subgraph
+tensor from the original adjacency stack at training time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .graphs import residual_adjacency
+
+
+@dataclasses.dataclass
+class ReplayBuffer:
+    capacity: int
+    num_nodes: int
+    size: int = 0
+    _ptr: int = 0
+
+    def __post_init__(self):
+        n, r = self.num_nodes, self.capacity
+        self.graph_idx = np.zeros((r,), np.int32)
+        self.solution = np.zeros((r, n), bool)       # packed S snapshot
+        self.action = np.zeros((r,), np.int32)
+        self.target = np.zeros((r,), np.float32)     # paper mode (Alg. 5 l.12)
+        self.reward = np.zeros((r,), np.float32)     # fresh-target mode
+        self.next_solution = np.zeros((r, n), bool)  # S' (still O(N)/tuple)
+        self.done = np.zeros((r,), bool)
+
+    def push(self, graph_idx: int, solution: np.ndarray, action: int,
+             target: float, reward: float = 0.0,
+             next_solution: Optional[np.ndarray] = None,
+             done: bool = False) -> None:
+        i = self._ptr
+        self.graph_idx[i] = graph_idx
+        self.solution[i] = np.asarray(solution) > 0.5
+        self.action[i] = action
+        self.target[i] = target
+        self.reward[i] = reward
+        if next_solution is not None:
+            self.next_solution[i] = np.asarray(next_solution) > 0.5
+        self.done[i] = done
+        self._ptr = (i + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def push_batch(self, graph_idx, solution, action, target,
+                   reward=None, next_solution=None, done=None) -> None:
+        b = len(np.atleast_1d(graph_idx))
+        reward = np.zeros(b) if reward is None else np.atleast_1d(reward)
+        done = np.zeros(b, bool) if done is None else np.atleast_1d(done)
+        next_solution = (np.zeros((b, self.num_nodes))
+                         if next_solution is None
+                         else np.atleast_2d(next_solution))
+        for g, s, a, t, r, s2, d in zip(
+                np.atleast_1d(graph_idx), np.atleast_2d(solution),
+                np.atleast_1d(action), np.atleast_1d(target),
+                reward, next_solution, done):
+            self.push(int(g), s, int(a), float(t), float(r), s2, bool(d))
+
+    def sample(self, batch: int, rng: np.random.Generator):
+        """Sample B tuples (with replacement once the buffer is warm).
+        Returns (graph_idx, S, action, stored_target, reward, S', done)."""
+        idx = rng.integers(0, self.size, size=batch)
+        return (self.graph_idx[idx], self.solution[idx].astype(np.float32),
+                self.action[idx], self.target[idx], self.reward[idx],
+                self.next_solution[idx].astype(np.float32), self.done[idx])
+
+    def nbytes(self) -> int:
+        """Actual storage — compare with §5.2's 8R(N/P + 1) estimate."""
+        return (self.graph_idx.nbytes + self.solution.nbytes +
+                self.action.nbytes + self.target.nbytes +
+                self.reward.nbytes + self.next_solution.nbytes +
+                self.done.nbytes)
+
+
+def tuples_to_graphs(adj_stack: jnp.ndarray, graph_idx: np.ndarray,
+                     solutions: np.ndarray) -> jnp.ndarray:
+    """Tuples2Graphs: (R?, B tuples) -> (B, N, N) residual adjacency tensor.
+
+    adj_stack: (G, N, N) original adjacencies of the training graph dataset.
+    """
+    base = adj_stack[jnp.asarray(graph_idx)]                # (B, N, N)
+    return residual_adjacency(base, jnp.asarray(solutions))

@@ -1,0 +1,91 @@
+"""structure2vec graph embedding model (paper Eq. 1, Alg. 2).
+
+``embed_local`` implements Alg. 2 exactly: each device computes embeddings for
+its N/P resident nodes from its (B, N/P, N) adjacency row-block, with one
+all-reduce of a (B, K, N) buffer per embedding layer (paper: MPI_All_reduce;
+here: ``jax.lax.psum`` when ``axis`` names a shard_map mesh axis, or a no-op
+in the single-device path ``axis=None``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class S2VParams:
+    """theta1..theta4 of Eq. 1 (embedding) — theta5..7 live in qmodel."""
+    theta1: jax.Array  # (K,)
+    theta2: jax.Array  # (K,)
+    theta3: jax.Array  # (K, K)
+    theta4: jax.Array  # (K, K)
+
+    @property
+    def dim(self) -> int:
+        return self.theta1.shape[0]
+
+
+def init_s2v(key: jax.Array, k: int, scale: float = 0.1) -> S2VParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return S2VParams(
+        theta1=jax.random.normal(k1, (k,)) * scale,
+        theta2=jax.random.normal(k2, (k,)) * scale,
+        theta3=jax.random.normal(k3, (k, k)) * (scale / jnp.sqrt(k)),
+        theta4=jax.random.normal(k4, (k, k)) * (scale / jnp.sqrt(k)),
+    )
+
+
+def embed_local(
+    params: S2VParams,
+    adj_local: jax.Array,       # (B, Nl, N) local rows of residual adjacency
+    sol_local: jax.Array,       # (B, Nl)    local slice of partial solution S
+    *,
+    num_layers: int,
+    axis: Optional[str] = None,  # shard_map axis name ("graph"), None = 1 device
+    mp_impl=None,                # optional fused message-passing kernel
+) -> jax.Array:
+    """Returns (B, K, Nl) embeddings of the local resident nodes (Alg. 2)."""
+    b, nl, n = adj_local.shape
+    k = params.dim
+
+    # Line 5: embed1 = θ1 · Sᵀ  →  (K,1)×(B,1,Nl) = (B,K,Nl)
+    embed1 = params.theta1[None, :, None] * sol_local[:, None, :]
+
+    # Lines 7-8: w = ReLU(θ2 ⊗ Aᵀ) = ReLU(θ2 · deg_local);  embed2 = θ3 @ w.
+    # θ2 is broadcast over nodes; the SpMatMul against Aᵀ sums each local
+    # node's incident edge weights (its degree, for unweighted graphs).
+    deg_local = adj_local.sum(-1)                           # (B, Nl)
+    w = jax.nn.relu(params.theta2[None, :, None] * deg_local[:, None, :])
+    embed2 = jnp.einsum("kj,bjn->bkn", params.theta3, w)    # (B, K, Nl)
+
+    if axis is not None:
+        my = lax.axis_index(axis)
+    embed = jnp.zeros((b, k, nl), adj_local.dtype)          # Line 3
+
+    for _ in range(num_layers):                             # Lines 9-15
+        # Line 11: partial neighbor sums from local rows: (B,K,Nl)@(B,Nl,N)
+        nbr_partial = jnp.einsum("bkl,bln->bkn", embed, adj_local)
+        if axis is not None:
+            # Line 12: MPI_All_reduce of the (B, K, N) buffer
+            nbr_full = lax.psum(nbr_partial, axis)
+            nbr_local = lax.dynamic_slice_in_dim(nbr_full, my * nl, nl, axis=2)
+        else:
+            nbr_local = nbr_partial                          # Nl == N
+        if mp_impl is not None:
+            # Fused Pallas epilogue: relu(e1 + e2 + θ4 @ nbr) in one pass.
+            embed = mp_impl(params.theta4, nbr_local, embed1 + embed2)
+        else:
+            embed3 = jnp.einsum("kj,bjn->bkn", params.theta4, nbr_local)
+            embed = jax.nn.relu(embed1 + embed2 + embed3)    # Line 14
+    return embed
+
+
+def embed_full(params: S2VParams, adj: jax.Array, sol: jax.Array,
+               *, num_layers: int) -> jax.Array:
+    """Single-device reference (Nl == N)."""
+    return embed_local(params, adj, sol, num_layers=num_layers, axis=None)

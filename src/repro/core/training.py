@@ -1,0 +1,96 @@
+"""Parallel RL training loop (paper Alg. 5).
+
+The paper launches P processes in lockstep (same seed) — one per GPU.  Under
+JAX's single-controller SPMD model there is exactly one logical program whose
+arrays are sharded, so the lockstep-by-seed machinery collapses away; the
+per-device work and collectives are identical (DESIGN.md §2).
+
+``train_agent`` is the episode driver: pick a training graph, roll the env,
+remember compressed tuples, run τ GD iterations per step, periodically
+evaluate solution quality on held-out test graphs (paper §6.2 learning
+curves).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import env as env_lib
+from .agent import Agent
+from .graphs import init_state
+from .inference import solve
+from .solvers import mvc_lower_bound, exact_mvc_size
+
+
+@dataclasses.dataclass
+class TrainLog:
+    steps: List[int] = dataclasses.field(default_factory=list)
+    losses: List[float] = dataclasses.field(default_factory=list)
+    approx_ratios: List[float] = dataclasses.field(default_factory=list)
+    eval_steps: List[int] = dataclasses.field(default_factory=list)
+    episode_lengths: List[int] = dataclasses.field(default_factory=list)
+    wall_time: float = 0.0
+
+
+def evaluate_quality(agent: Agent, test_adj: np.ndarray,
+                     reference_sizes: np.ndarray, *,
+                     multi_node: bool = False) -> float:
+    """Average approximation ratio |RL solution| / |reference| (paper §6.2)."""
+    res = solve(agent.params, test_adj, num_layers=agent.cfg.num_layers,
+                multi_node=multi_node)
+    return float(np.mean(res.sizes / np.maximum(reference_sizes, 1)))
+
+
+def train_agent(
+    agent: Agent,
+    train_adj: np.ndarray,            # (G, N, N) training graph dataset
+    *,
+    problem: str = "mvc",
+    episodes: int = 50,
+    tau: Optional[int] = None,        # GD iterations per env step (§4.5.2)
+    batch_graphs: int = 1,            # graphs stepped together per episode
+    eval_every: int = 10,             # paper: test every 10 training steps
+    eval_fn: Optional[Callable[[Agent], float]] = None,
+    max_steps: Optional[int] = None,  # global RL-training-step budget
+    seed: int = 0,
+) -> TrainLog:
+    rng = np.random.default_rng(seed)
+    step_fn = env_lib.make(problem)
+    adj_stack = jnp.asarray(train_adj, jnp.float32)
+    g_count, n, _ = train_adj.shape
+    log = TrainLog()
+    t0 = time.time()
+    total_steps = 0
+
+    for _ep in range(episodes):
+        # Alg. 5 line 4: random training graph(s), same across all devices.
+        gi = rng.integers(0, g_count, size=batch_graphs)
+        state = init_state(adj_stack[jnp.asarray(gi)])
+        ep_len = 0
+        for _t in range(n):
+            if max_steps is not None and total_steps >= max_steps:
+                break
+            action = agent.act(state, explore=True)
+            new_state, reward, done = step_fn(state, jnp.asarray(action))
+            agent.remember(gi, state, action, np.asarray(reward), new_state,
+                           np.asarray(done))
+            loss = agent.train(adj_stack, tau=tau)
+            state = new_state
+            ep_len += 1
+            total_steps += 1
+            log.steps.append(total_steps)
+            log.losses.append(loss)
+            if eval_fn is not None and total_steps % eval_every == 0:
+                log.eval_steps.append(total_steps)
+                log.approx_ratios.append(eval_fn(agent))
+            if bool(np.asarray(done).all()):
+                break
+        log.episode_lengths.append(ep_len)
+        if max_steps is not None and total_steps >= max_steps:
+            break
+    log.wall_time = time.time() - t0
+    return log

@@ -1,0 +1,81 @@
+"""Data pipeline: per-arch batch construction.
+
+``batch_spec`` returns the ShapeDtypeStructs for every model input (used by
+the multi-pod dry-run's input_specs); ``synthetic_batch`` materializes a
+seeded random batch of the same structure (smoke tests, examples, the LM
+training driver).  Audio/VLM frontends are stubs per the brief: we emit
+frame/patch *embeddings* of the configured dimension directly.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _text_len(cfg, seq_len: int) -> int:
+    if cfg.vlm_patches:
+        assert seq_len > cfg.vlm_patches, (
+            f"seq_len {seq_len} must exceed patch budget {cfg.vlm_patches}")
+        return seq_len - cfg.vlm_patches
+    return seq_len
+
+
+def batch_spec(cfg, seq_len: int, batch: int, mode: str = "train"
+               ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input ShapeDtypeStructs for (arch, shape)."""
+    sds = jax.ShapeDtypeStruct
+    if mode == "decode":
+        return {"token": sds((batch, 1), jnp.int32),
+                "pos": sds((batch,), jnp.int32)}
+    if cfg.is_encoder:
+        return {"frames": sds((batch, seq_len, cfg.frontend_dim),
+                              jnp.bfloat16 if cfg.dtype == "bfloat16"
+                              else jnp.float32),
+                "labels": sds((batch, seq_len), jnp.int32)}
+    out = {"tokens": sds((batch, _text_len(cfg, seq_len)), jnp.int32)}
+    if cfg.vlm_patches:
+        out["patches"] = sds((batch, cfg.vlm_patches, cfg.frontend_dim),
+                             jnp.bfloat16 if cfg.dtype == "bfloat16"
+                             else jnp.float32)
+        if mode == "train":
+            out["labels"] = sds((batch, _text_len(cfg, seq_len)), jnp.int32)
+    return out
+
+
+def synthetic_batch(cfg, seq_len: int, batch: int, mode: str = "train",
+                    seed: int = 0) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    spec = batch_spec(cfg, seq_len, batch, mode)
+    out = {}
+    for name, s in spec.items():
+        if np.issubdtype(s.dtype, np.integer):
+            hi = cfg.vocab_size if name in ("tokens", "labels", "token") \
+                else seq_len
+            out[name] = jnp.asarray(
+                rng.integers(0, hi, size=s.shape, dtype=np.int32))
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(s.shape).astype(np.float32)).astype(
+                s.dtype)
+    return out
+
+
+def token_stream(cfg, seq_len: int, batch: int, *, steps: int, seed: int = 0):
+    """Deterministic synthetic next-token training stream with a learnable
+    bigram structure (so loss measurably decreases)."""
+    rng = np.random.default_rng(seed)
+    v = cfg.vocab_size
+    # fixed sparse bigram table: t+1 ≡ (a·t + b) mod v with noise
+    a, b = 31, 17
+    for step in range(steps):
+        first = rng.integers(0, v, size=(batch, 1), dtype=np.int64)
+        toks = [first]
+        for _ in range(seq_len - 1):
+            nxt = (a * toks[-1] + b) % v
+            noise = rng.random((batch, 1)) < 0.1
+            rand = rng.integers(0, v, size=(batch, 1), dtype=np.int64)
+            toks.append(np.where(noise, rand, nxt))
+        yield {"tokens": jnp.asarray(np.concatenate(toks, 1), jnp.int32)}

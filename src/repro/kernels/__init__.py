@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+- s2v_mp: structure2vec message passing (paper Alg. 2) — blocked batched
+  matmul + fused θ4/ReLU epilogue.
+- wkv6:   chunked RWKV-6 linear-attention recurrence.
+- swa:    sliding-window causal flash attention.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
+jit'd public entry points (interpret mode on CPU, compiled on TPU).
+"""
+from . import ops, ref
+from .ops import s2v_layer, mp_aggregate, wkv6, swa, grouped_glu_ffn

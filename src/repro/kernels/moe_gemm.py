@@ -1,0 +1,110 @@
+"""Grouped expert-FFN Pallas kernel: per-expert GLU over capacity buffers.
+
+The expert-parallel MoE (models/ffn.py) reduces to batched per-expert GEMMs
+over (E_local, C, d) capacity buffers — on GPU this is a grouped-GEMM
+library call; on TPU we tile each expert's (C, d)×(d, f) matmuls through
+VMEM with the expert index as the outer grid axis and fuse the SiLU·up
+product into the first pass.
+
+  h = silu(x @ wg) * (x @ wu)        (kernel 1, fused epilogue)
+  y = h @ wo                         (kernel 2)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _glu_kernel(x_ref, wg_ref, wu_ref, o_ref, acc_g, acc_u):
+    dk = pl.program_id(3)
+
+    @pl.when(dk == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    x = x_ref[0]
+    acc_g[...] += jax.lax.dot_general(
+        x, wg_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_u[...] += jax.lax.dot_general(
+        x, wu_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(dk == pl.num_programs(3) - 1)
+    def _flush():
+        g = acc_g[...]
+        o_ref[0] = (g / (1.0 + jnp.exp(-g))) * acc_u[...]   # silu(g)·u
+
+
+def _proj_kernel(h_ref, wo_ref, o_ref, acc):
+    fk = pl.program_id(3)
+
+    @pl.when(fk == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        h_ref[0], wo_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(fk == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0] = acc[...]
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def grouped_glu_ffn(x, wg, wu, wo, *, tile_c: int = 128, tile_d: int = 128,
+                    tile_f: int = 128, interpret: bool = True):
+    """x (E, C, d); wg/wu (E, d, f); wo (E, f, d) → (E, C, d) f32."""
+    e, c, d = x.shape
+    f = wg.shape[-1]
+    tc, td, tf = min(tile_c, c), min(tile_d, d), min(tile_f, f)
+    xp = _pad_to(_pad_to(x, tc, 1), td, 2)
+    wgp = _pad_to(_pad_to(wg, td, 1), tf, 2)
+    wup = _pad_to(_pad_to(wu, td, 1), tf, 2)
+    cp, dp = xp.shape[1], xp.shape[2]
+    fp = wgp.shape[2]
+    f32 = jnp.float32
+
+    h = pl.pallas_call(
+        _glu_kernel,
+        grid=(e, cp // tc, fp // tf, dp // td),
+        in_specs=[
+            pl.BlockSpec((1, tc, td), lambda ei, ci, fi, di: (ei, ci, di)),
+            pl.BlockSpec((1, td, tf), lambda ei, ci, fi, di: (ei, di, fi)),
+            pl.BlockSpec((1, td, tf), lambda ei, ci, fi, di: (ei, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, tf), lambda ei, ci, fi, di:
+                               (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, fp), f32),
+        scratch_shapes=[pltpu.VMEM((tc, tf), f32),
+                        pltpu.VMEM((tc, tf), f32)],
+        interpret=interpret,
+    )(xp.astype(f32), wgp.astype(f32), wup.astype(f32))
+
+    wop = _pad_to(_pad_to(wo, tf, 1), td, 2)
+    y = pl.pallas_call(
+        _proj_kernel,
+        grid=(e, cp // tc, dp // td, fp // tf),
+        in_specs=[
+            pl.BlockSpec((1, tc, tf), lambda ei, ci, di, fi: (ei, ci, fi)),
+            pl.BlockSpec((1, tf, td), lambda ei, ci, di, fi: (ei, fi, di)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, td), lambda ei, ci, di, fi:
+                               (ei, ci, di)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, dp), f32),
+        scratch_shapes=[pltpu.VMEM((tc, td), f32)],
+        interpret=interpret,
+    )(h, wop.astype(f32))
+    return y[:, :c, :d]

@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+selected once at import from the backend.  All wrappers accept/return the
+same shapes as their ``ref.py`` oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .s2v_mp import s2v_layer as _s2v_layer, mp_aggregate as _mp_aggregate
+from .wkv6 import wkv6_chunked as _wkv6_chunked
+from .swa import swa_attention as _swa_attention
+from .moe_gemm import grouped_glu_ffn as _grouped_glu_ffn
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_l", "interpret"))
+def s2v_layer(theta4, embed, adj, base, *, tile_n: int = 128,
+              tile_l: int = 128, interpret: bool | None = None):
+    """Fused structure2vec layer (paper Alg. 2 lines 11+13-14, local part)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _s2v_layer(theta4, embed, adj, base, tile_n=tile_n,
+                      tile_l=tile_l, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_l", "interpret"))
+def mp_aggregate(embed, adj, *, tile_n: int = 128, tile_l: int = 128,
+                 interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mp_aggregate(embed, adj, tile_n=tile_n, tile_l=tile_l,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
+    """Chunked RWKV6 recurrence. Returns (out, final_state)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _wkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "tile_q", "tile_k", "interpret"))
+def swa(q, k, v, *, window: int, tile_q: int = 128, tile_k: int = 128,
+        interpret: bool | None = None):
+    """Sliding-window causal flash attention."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _swa_attention(q, k, v, window=window, tile_q=tile_q,
+                          tile_k=tile_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "tile_d", "tile_f",
+                                              "interpret"))
+def grouped_glu_ffn(x, wg, wu, wo, *, tile_c: int = 128, tile_d: int = 128,
+                    tile_f: int = 128, interpret: bool | None = None):
+    """Grouped per-expert GLU FFN (MoE hotspot)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _grouped_glu_ffn(x, wg, wu, wo, tile_c=tile_c, tile_d=tile_d,
+                            tile_f=tile_f, interpret=interpret)
+
+
+# re-export oracles for convenience
+ref = _ref

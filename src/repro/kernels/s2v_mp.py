@@ -1,0 +1,110 @@
+"""Pallas TPU kernels for the structure2vec message-passing hot loop.
+
+The paper's per-step cost is dominated by Alg. 2 line 11 — the batched
+(K, N/P)×(N/P, N) neighbor aggregation — followed by the θ4 projection +
+ReLU (lines 13-14).  The GPU original uses cuSPARSE COO SpMM; on TPU we
+restructure to dense MXU tiles staged through VMEM (DESIGN.md §2):
+
+- ``mp_aggregate_kernel``: blocked batched matmul, reduction dimension as the
+  innermost (sequential) grid axis accumulating into a VMEM f32 scratch.
+- ``mp_epilogue_kernel``: fused θ4-projection + residual add + ReLU, saving
+  one HBM round-trip of the (B, K, N/P) embedding tensor.
+
+Tile sizes default to MXU-aligned (128) and are clamped for small problems.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _agg_kernel(e_ref, a_ref, o_ref, acc):
+    """Grid (B, N/TN, Nl/TL). e (1,K,TL) @ a (1,TL,TN) accumulated over l."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        e_ref[0], a_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = acc[...]
+
+
+def mp_aggregate(embed: jax.Array, adj: jax.Array, *, tile_n: int = 128,
+                 tile_l: int = 128, interpret: bool = True) -> jax.Array:
+    """nbr[b,k,n] = Σ_l embed[b,k,l]·adj[b,l,n] with VMEM-blocked tiles."""
+    b, k, nl = embed.shape
+    _, _, n = adj.shape
+    tn = min(tile_n, n)
+    tl = min(tile_l, nl)
+    # pad to tile multiples (padding rows/cols are zero → no effect on sums)
+    pn, pl_ = (-n) % tn, (-nl) % tl
+    if pn or pl_:
+        embed = jnp.pad(embed, ((0, 0), (0, 0), (0, pl_)))
+        adj = jnp.pad(adj, ((0, 0), (0, pl_), (0, pn)))
+    npad, nlpad = n + pn, nl + pl_
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(b, npad // tn, nlpad // tl),
+        in_specs=[
+            pl.BlockSpec((1, k, tl), lambda bi, ni, li: (bi, 0, li)),
+            pl.BlockSpec((1, tl, tn), lambda bi, ni, li: (bi, li, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, k, tn), lambda bi, ni, li: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, k, npad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((k, tn), jnp.float32)],
+        interpret=interpret,
+    )(embed.astype(jnp.float32), adj.astype(jnp.float32))
+    return out[:, :, :n]
+
+
+def _epi_kernel(t4_ref, nbr_ref, base_ref, o_ref):
+    """Grid (B, Nl/TN): o = relu(base + θ4 @ nbr)."""
+    e3 = jax.lax.dot_general(t4_ref[...], nbr_ref[0], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.maximum(base_ref[0] + e3, 0.0)
+
+
+def mp_epilogue(theta4: jax.Array, nbr: jax.Array, base: jax.Array, *,
+                tile_n: int = 128, interpret: bool = True) -> jax.Array:
+    b, k, nl = nbr.shape
+    tn = min(tile_n, nl)
+    pad = (-nl) % tn
+    if pad:
+        nbr = jnp.pad(nbr, ((0, 0), (0, 0), (0, pad)))
+        base = jnp.pad(base, ((0, 0), (0, 0), (0, pad)))
+    nlp = nl + pad
+
+    out = pl.pallas_call(
+        _epi_kernel,
+        grid=(b, nlp // tn),
+        in_specs=[
+            pl.BlockSpec((k, k), lambda bi, ni: (0, 0)),
+            pl.BlockSpec((1, k, tn), lambda bi, ni: (bi, 0, ni)),
+            pl.BlockSpec((1, k, tn), lambda bi, ni: (bi, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, k, tn), lambda bi, ni: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, k, nlp), jnp.float32),
+        interpret=interpret,
+    )(theta4.astype(jnp.float32), nbr.astype(jnp.float32),
+      base.astype(jnp.float32))
+    return out[:, :, :nl]
+
+
+def s2v_layer(theta4, embed, adj, base, *, tile_n: int = 128,
+              tile_l: int = 128, interpret: bool = True) -> jax.Array:
+    """One fused embedding layer on local data (no collective — the psum
+    between aggregate and epilogue lives in repro.core.s2v)."""
+    nbr = mp_aggregate(embed, adj, tile_n=tile_n, tile_l=tile_l,
+                       interpret=interpret)
+    return mp_epilogue(theta4, nbr, base, tile_n=tile_n, interpret=interpret)

@@ -1,0 +1,109 @@
+"""Sliding-window causal flash attention Pallas TPU kernel (gemma3 local
+layers; also exercised by the long-context roofline study).
+
+Flash-style online softmax over KV tiles.  For window w, each query tile of
+TQ rows only ever overlaps ``w//TK + 2`` KV tiles, so the grid's KV axis is
+that constant — compute is O(T·w), not O(T²).  Out-of-range tile indices are
+clamped by the index_map (the position mask zeroes their contribution).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kv_block_idx(qi, kj, n_kv_tiles_in_window, tq, tk, num_kv_blocks):
+    """First overlapping KV tile for query tile qi, offset by kj, clamped."""
+    first = (qi * tq) // tk - (n_kv_tiles_in_window - 1)
+    return jnp.clip(first + kj, 0, num_kv_blocks - 1)
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_acc, l_acc, acc,
+                *, window, tq, tk, num_kv_blocks, n_win, scale):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0]                                   # (TQ, d)
+    k = k_ref[0]                                   # (TK, d)
+    v = v_ref[0]                                   # (TK, d)
+
+    raw_blk = (qi * tq) // tk - (n_win - 1) + kj     # may be out of range
+    kv_blk = jnp.clip(raw_blk, 0, num_kv_blocks - 1)
+    q_pos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    k_pos = kv_blk * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    # out-of-range tiles alias a clamped in-range tile; drop them entirely so
+    # the aliased tile is not double-counted
+    in_range = raw_blk == kv_blk
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window) & in_range
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_acc[...]                            # (TQ, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                         # (TQ, TK)
+    l_acc[...] = l_acc[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc[...] = acc[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_acc[...] = m_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = acc[...] / jnp.maximum(l_acc[...], 1e-20)
+
+
+def swa_attention(q, k, v, *, window: int, tile_q: int = 128,
+                  tile_k: int = 128, scale: float | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """q (BH, Tq, d), k/v (BH, Tk, d) with Tq == Tk (self-attention).
+
+    Returns (BH, Tq, d) f32.
+    """
+    bh, t, d = q.shape
+    tq = min(tile_q, t)
+    tk = min(tile_k, t)
+    assert t % tq == 0 and t % tk == 0, (t, tq, tk)
+    scale = (d ** -0.5) if scale is None else scale
+    num_kv_blocks = t // tk
+    # tiles overlapping [q_start - window + 1, q_end]
+    n_win = min((window + tq) // tk + 1, num_kv_blocks)
+
+    kv_map = functools.partial(_kv_block_idx, n_kv_tiles_in_window=n_win,
+                               tq=tq, tk=tk, num_kv_blocks=num_kv_blocks)
+
+    out = pl.pallas_call(
+        functools.partial(_swa_kernel, window=window, tq=tq, tk=tk,
+                          num_kv_blocks=num_kv_blocks, n_win=n_win,
+                          scale=scale),
+        grid=(bh, t // tq, n_win),
+        in_specs=[
+            pl.BlockSpec((1, tq, d), lambda b, qi, kj: (b, qi, 0)),
+            pl.BlockSpec((1, tk, d),
+                         lambda b, qi, kj: (b, kv_map(qi, kj), 0)),
+            pl.BlockSpec((1, tk, d),
+                         lambda b, qi, kj: (b, kv_map(qi, kj), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, d), lambda b, qi, kj: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    return out

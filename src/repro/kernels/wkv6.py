@@ -1,0 +1,110 @@
+"""Chunked WKV6 (RWKV-6 "Finch") Pallas TPU kernel.
+
+The GPU reference implements the recurrence token-by-token (CUDA kernel with
+one thread per channel).  TPU-native adaptation (DESIGN.md §2): process the
+sequence in chunks of C tokens; within a chunk the recurrence is re-expressed
+as a (C×C) masked matmul (MXU work) plus a rank-C state update, with the
+(dk × dv) state carried across the sequential chunk axis in VMEM scratch.
+
+Math (per head; S = state, w = decay in (0,1], u = bonus):
+  o_t = r_t·(S_{t-1} + diag(u) k_tᵀ v_t);   S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+With cum_t = Σ_{s≤t} log w_s inside a chunk:
+  q'_t = r_t ⊙ exp(cum_t - lw_t)          (decay from chunk start to t-1)
+  k'_s = k_s ⊙ exp(-cum_s)
+  o_t  = q'_t S_0 + Σ_{s<t} (q'_t·k'_s) v_s + (r_t⊙u·k_t) v_t
+  S_C  = diag(exp(cum_C)) S_0 + Σ_s (k_s ⊙ exp(cum_C - cum_s))ᵀ v_s
+
+Stability domain: exponents are chunk-local, bounded by C·|log w|min; with
+C = 64 and w ≥ 0.55 the f32 range is safe (documented; ops.py asserts).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sfin_ref, s_acc):
+    """Grid (BH, T/C); chunk axis sequential, state in VMEM scratch."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+
+    r = r_ref[0]          # (C, dk)
+    k = k_ref[0]
+    v = v_ref[0]          # (C, dv)
+    lw = lw_ref[0]        # (C, dk) log decay
+    u = u_ref[0]          # (1, dk)
+
+    cum = jnp.cumsum(lw, axis=0)                  # inclusive (C, dk)
+    qp = r * jnp.exp(cum - lw)                    # r_t ⊙ D_{t-1}
+    kp = k * jnp.exp(-cum)                        # k_s / D_s
+
+    cc = r.shape[0]
+    a = jax.lax.dot_general(qp, kp, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (cc, cc), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (cc, cc), 1)
+    a = jnp.where(si < ti, a, 0.0)                # strict lower triangle s < t
+    diag = jnp.sum(r * u * k, axis=1)             # (C,) current-token bonus
+    a = a + jnp.diag(diag)
+
+    o_intra = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    o_inter = jax.lax.dot_general(qp, s_acc[...], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    o_ref[0] = o_intra + o_inter
+
+    # state update: S ← diag(exp(cum_C)) S + (k ⊙ exp(cum_C - cum))ᵀ V
+    cum_last = cum[-1]                            # (dk,)
+    kd = k * jnp.exp(cum_last[None, :] - cum)     # (C, dk)
+    s_acc[...] = (jnp.exp(cum_last)[:, None] * s_acc[...] +
+                  jax.lax.dot_general(kd, v, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32))
+
+    @pl.when(c == pl.num_programs(1) - 1)
+    def _flush():
+        sfin_ref[0] = s_acc[...]
+
+
+def wkv6_chunked(r, k, v, w, u, *, chunk: int = 64,
+                 interpret: bool = True):
+    """r/k/w: (BH, T, dk), v: (BH, T, dv), u: (BH, dk), w ∈ (0, 1].
+
+    Returns (out (BH, T, dv) f32, final_state (BH, dk, dv) f32).
+    """
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0, f"T={t} must be divisible by chunk={c}"
+    f32 = jnp.float32
+    lw = jnp.log(jnp.clip(w.astype(f32), 1e-6, 1.0))
+    u2 = u.astype(f32)[:, None, :]                # (BH, 1, dk)
+
+    out, sfin = pl.pallas_call(
+        _wkv6_kernel,
+        grid=(bh, t // c),
+        in_specs=[
+            pl.BlockSpec((1, c, dk), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, dk), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, dv), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, c, dk), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, 1, dk), lambda b, ci: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, dv), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), f32),
+            jax.ShapeDtypeStruct((bh, dk, dv), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), f32)],
+        interpret=interpret,
+    )(r.astype(f32), k.astype(f32), v.astype(f32), lw, u2)
+    return out, sfin

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers AND compiles every supported (architecture × input shape) on the
+production meshes — 16×16 single-pod and 2×16×16 multi-pod — using
+ShapeDtypeStruct stand-ins (no allocation), then prints memory_analysis()
+and cost_analysis() and records the roofline terms (deliverable g).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_arch, shape_supported
+from ..data.pipeline import batch_spec
+from ..models import (ModelCtx, Sharder, init_params, init_cache,
+                      make_train_step, make_prefill, make_decode_step)
+from ..models.lm import _dtype_of
+from ..optim import adam_init
+from ..sharding import (param_specs, activation_rules, batch_specs,
+                        cache_specs, data_axes_of)
+from ..roofline import (collective_bytes, roofline_terms, model_flops,
+                        HW)
+from ..roofline.analysis import active_param_count
+from .mesh import make_production_mesh
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def input_specs(arch_name: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape)."""
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    return batch_spec(cfg, shape.seq_len, shape.global_batch, shape.mode)
+
+
+def _sharded_sds(shape_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        shape_tree, spec_tree)
+
+
+def lower_and_compile(arch_name: str, shape_name: str, *,
+                      multi_pod: bool = False, moe_mode: str = "allreduce",
+                      zero3: bool = False, remat: bool = True,
+                      layout: str = "tp", moment_dtype: str = "float32",
+                      clip_norm: float | None = 1.0, q_chunk: int = 512,
+                      seq_override: int | None = None,
+                      extra_tag: str = ""):
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    if seq_override:
+        import dataclasses as _dc
+        shape = _dc.replace(shape, seq_len=seq_override)
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    ctx = ModelCtx(mesh=mesh, moe_mode=moe_mode if cfg.is_moe else "dense",
+                   sharder=Sharder(mesh, activation_rules(mesh, shape,
+                                                          layout=layout)),
+                   remat=remat, q_chunk=q_chunk)
+
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg),
+                                  jax.random.key(0))
+    pspecs = param_specs(params_shape, mesh, zero3=zero3, layout=layout)
+    p_sds = _sharded_sds(params_shape, pspecs, mesh)
+    bspec_tree = batch_spec(cfg, shape.seq_len, shape.global_batch,
+                            shape.mode)
+    b_sds = _sharded_sds(bspec_tree,
+                         batch_specs(bspec_tree, mesh, shape, layout=layout),
+                         mesh)
+
+    t0 = time.time()
+    if shape.mode == "train":
+        mdt = jnp.bfloat16 if moment_dtype == "bfloat16" else jnp.float32
+        opt_shape = jax.eval_shape(
+            functools.partial(adam_init, moment_dtype=mdt), params_shape)
+        from ..optim.adam import AdamState
+        ospecs = AdamState(step=P(), mu=pspecs, nu=pspecs)
+        o_sds = _sharded_sds(opt_shape, ospecs, mesh)
+        step = make_train_step(cfg, ctx, clip_norm=clip_norm)
+        out_shardings = (
+            jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs),
+            jax.tree.map(lambda sp: NamedSharding(mesh, sp), ospecs),
+            None,
+        )
+        lowered = jax.jit(step, out_shardings=out_shardings).lower(
+            p_sds, o_sds, b_sds)
+    elif shape.mode == "prefill":
+        step = make_prefill(cfg, ctx)
+        lowered = jax.jit(step).lower(p_sds, b_sds)
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        cspecs = cache_specs(cache_shape, mesh, shape, shape.global_batch)
+        c_sds = _sharded_sds(cache_shape, cspecs, mesh)
+        step = make_decode_step(cfg, ctx)
+        lowered = jax.jit(step).lower(p_sds, c_sds, b_sds["token"],
+                                      b_sds["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_active = active_param_count(cfg, params_shape)
+    n_total = sum(x.size for x in jax.tree.leaves(params_shape))
+    mf = model_flops(cfg, shape, n_active)
+    from ..roofline.analytic import analytic_flops, analytic_hbm_bytes
+    afl = analytic_flops(cfg, shape, remat=remat)
+    aby = analytic_hbm_bytes(cfg, shape, n_total, n_active, remat=remat)
+    terms = roofline_terms(cost, coll, chips, mf, analytic_fl=afl,
+                           analytic_bytes=aby)
+
+    rec = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "moe_mode": ctx.moe_mode, "zero3": zero3,
+        "layout": layout, "moment_dtype": moment_dtype,
+        "params_total": int(n_total), "params_active": int(n_active),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.peak_memory_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": {k: v for k, v in coll.items()},
+        "roofline": terms,
+    }
+    return rec
+
+
+def summarize(rec) -> str:
+    if "skipped" in rec:
+        return f"SKIP {rec['arch']:<18} {rec['shape']:<12} — {rec['skipped']}"
+    r = rec["roofline"]
+    m = rec["memory"]
+    gib = 1 << 30
+    return (f"OK   {rec['arch']:<18} {rec['shape']:<12} {rec['mesh']:<7} "
+            f"args/dev={m['argument_bytes']/gib:7.2f}GiB "
+            f"temp/dev={m['temp_bytes']/gib:7.2f}GiB "
+            f"compute={r['compute_s']*1e3:9.2f}ms "
+            f"mem={r['memory_s']*1e3:9.2f}ms "
+            f"coll={r['collective_s']*1e3:9.2f}ms "
+            f"dom={r['dominant'].replace('_s',''):<10} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"[compile {rec['compile_s']:.0f}s]")
+
+
+def run_one(arch, shape, args):
+    tag = "mp" if args.multi_pod else "sp"
+    extra = (f"__{args.tag}" if args.tag else "")
+    out = OUT_DIR / f"{arch}__{shape}__{tag}{extra}.json"
+    try:
+        rec = lower_and_compile(arch, shape, multi_pod=args.multi_pod,
+                                moe_mode=args.moe_mode, zero3=args.zero3,
+                                remat=not args.no_remat, layout=args.layout,
+                                moment_dtype=args.moment_dtype,
+                                clip_norm=None if args.no_clip else 1.0,
+                                q_chunk=args.q_chunk)
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"arch": arch, "shape": shape, "error": repr(e),
+               "traceback": traceback.format_exc()}
+        print(f"FAIL {arch:<18} {shape:<12} — {e!r}")
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rec, indent=1))
+        return rec
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    print(summarize(rec), flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-mode", default="allreduce",
+                    choices=["allreduce", "alltoall", "alltoall_rep"])
+    ap.add_argument("--zero3", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shard params over data axes too (ZeRO-3); required "
+                         "for the ≥100B configs to fit 16 GiB/chip")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp", "sp"])
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--no-clip", action="store_true",
+                    help="drop global-norm clipping (grad-AR probe)")
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        for arch in sorted(ARCHS):
+            for shape in ("train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"):
+                run_one(arch, shape, args)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        rec = run_one(args.arch, args.shape, args)
+        if "error" in rec:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

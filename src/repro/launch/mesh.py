@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — the pod axis is
+pure data parallelism (gradient all-reduce over DCI).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 512 if multi_pod else 256
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for {'multi' if multi_pod else 'single'}-pod"
+            f" mesh, have {len(devices)}; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run) "
+            "or on real hardware")
+    import numpy as np
+    dev_array = np.asarray(devices[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(
+        dev_array, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(p: int | None = None) -> jax.sharding.Mesh:
+    """Small CPU mesh for tests: (1, P) data×model."""
+    devs = jax.devices()
+    p = len(devs) if p is None else p
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devs[:p]).reshape(1, p), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

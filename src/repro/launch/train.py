@@ -1,0 +1,85 @@
+"""Production LM training launcher.
+
+On real hardware this runs under the production mesh; on this container it
+runs reduced configs on CPU (the full configs go through dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b \
+        --reduced --steps 10 --batch 2 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS, get_arch
+from ..data.pipeline import token_stream, synthetic_batch
+from ..models import (ModelCtx, Sharder, init_params, make_train_step,
+                      param_count)
+from ..optim import adam_init
+from ..checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from ..sharding import param_specs, activation_rules, batch_specs
+from .mesh import make_production_mesh, make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized variant of the arch family")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--moe-mode", default="dense",
+                    choices=["dense", "allreduce", "alltoall"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="build the 16x16 mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
+    if args.production_mesh:
+        mesh = make_production_mesh()
+        from ..configs.base import ShapeConfig
+        shp = ShapeConfig("cli", args.seq, args.batch, "train")
+        ctx = ModelCtx(mesh=mesh, moe_mode=args.moe_mode,
+                       sharder=Sharder(mesh, activation_rules(mesh, shp)))
+    else:
+        ctx = ModelCtx(remat=False, moe_mode=args.moe_mode
+                       if args.moe_mode != "allreduce" else "dense",
+                       wkv_chunk=32)
+
+    params = init_params(jax.random.key(0), cfg)
+    opt = adam_init(params)
+    print(f"{cfg.name}: {param_count(params)/1e6:.1f}M params on "
+          f"{len(jax.devices())} device(s)")
+
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt), start = restore_checkpoint(args.ckpt_dir,
+                                                  (params, opt))
+        print(f"restored step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, ctx, lr=args.lr))
+    t0 = time.time()
+    for i, batch in enumerate(token_stream(cfg, args.seq, args.batch,
+                                           steps=args.steps, seed=start)):
+        params, opt, m = step_fn(params, opt, batch)
+        print(f"step {start+i:5d} loss {float(m['loss']):.4f} "
+              f"gnorm {float(m['grad_norm']):.3f}")
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, start + i + 1, (params, opt))
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, start + args.steps, (params, opt))
+    print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

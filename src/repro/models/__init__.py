@@ -1,0 +1,7 @@
+"""Model substrate: attention (GQA/SWA/MLA), FFN (GLU/MoE), RWKV6, Mamba,
+block programs, and the generic LM/encoder/VLM assembly."""
+from .blocks import ModelCtx, build_program, layer_sigs
+from .lm import (init_params, init_cache, param_count, make_train_step,
+                 make_eval_step, make_prefill, make_decode_step, loss_fn,
+                 chunked_xent)
+from .shard import Sharder, NoSharder, NO_SHARD

@@ -1,0 +1,248 @@
+"""Attention mixers: GQA (global / sliding-window / bidirectional) and MLA
+(DeepSeek-V3 multi-head latent attention, absorbed form).
+
+Training/prefill uses chunked-query attention (exact softmax over the full
+key axis per query chunk) so the (T, S) score tensor is never materialized —
+the TPU-memory analogue of flash attention, with the Pallas SWA kernel
+available for window layers on real TPUs.
+
+Decode takes a KV cache and one query token.  Caches:
+  GQA: {"k": (B, S, KV, hd), "v": (B, S, KV, hd)}
+  MLA: {"ckv": (B, S, kv_lora), "krope": (B, S, rope_dim)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import apply_rope, dense_init, rms_norm, split_keys
+from .shard import NO_SHARD
+
+NEG_INF = -1e30
+Q_CHUNK = 512
+
+
+# --------------------------------------------------------------- GQA -------
+
+def init_gqa(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype).reshape(d, h, hd),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype).reshape(d, kv, hd),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype).reshape(d, kv, hd),
+        "wo": dense_init(ks[3], (h * hd, d), dtype).reshape(h, hd, d),
+    }
+
+
+def _mask(q_pos, k_pos, kind: str, window: int):
+    """(..., Tq, Tk) boolean attend-mask."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    if kind == "bidir":
+        return jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    m = dk <= dq
+    if kind == "window":
+        m &= dk > dq - window
+    return m
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, kind, window, scale, sharder,
+                  q_chunk: int = Q_CHUNK):
+    """q (B,T,KV,G,hd); k/v (B,S,KV,hd) → (B,T,KV,G,hd).
+
+    Scans over query chunks; exact softmax over the whole key axis.
+    """
+    b, t, kvh, g, hd = q.shape
+    s = k.shape[1]
+    nq = max(t // q_chunk, 1)
+    cq = t // nq
+
+    def chunk(carry, idx):
+        qc = lax.dynamic_slice_in_dim(q, idx * cq, cq, axis=1)
+        pc = lax.dynamic_slice_in_dim(q_pos, idx * cq, cq, axis=0)
+        logits = jnp.einsum("btkgh,bskh->bkgts", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        m = _mask(pc, k_pos, kind, window)                  # (cq, S)
+        logits = jnp.where(m[None, None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        oc = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+        return carry, oc.astype(q.dtype)
+
+    # remat: never keep per-chunk (Tq, S) probability tensors for backward
+    chunk = jax.checkpoint(chunk,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    _, chunks = lax.scan(chunk, None, jnp.arange(nq))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, t, kvh, g, hd)
+    return out
+
+
+def gqa_apply(p, x, *, cfg, kind: str = "causal",
+              cache: Optional[dict] = None, pos: Optional[jax.Array] = None,
+              sharder=NO_SHARD, q_chunk: int = Q_CHUNK):
+    """x (B, T, d).  Train/prefill when cache is None; else single-token
+    decode at position ``pos`` (B,) int32.  Returns (out, new_cache)."""
+    b, t, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kvh
+    window = cfg.sliding_window
+    scale = hd ** -0.5
+
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    q = sharder.act(q, "act_qkv")
+    k = sharder.act(k, "act_kv")
+    v = sharder.act(v, "act_kv")
+
+    if cache is None:
+        positions = jnp.arange(t)
+        q = apply_rope(q, positions[None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[None, :], cfg.rope_theta)
+        qg = q.reshape(b, t, kvh, g, hd)
+        out = _sdpa_chunked(qg, k, v, positions, positions,
+                            "bidir" if kind == "bidir" else kind,
+                            window, scale, sharder, q_chunk=q_chunk)
+        new_cache = {"k": k, "v": v,
+                     "k_pos": jnp.broadcast_to(positions[None], (b, t))}
+    else:
+        # decode: t == 1; the cache ring-buffers S slots (S == window for
+        # sliding-window layers) — slot = pos % S, with per-slot absolute
+        # positions in cache["k_pos"] for masking.
+        s = cache["k"].shape[1]
+        slot = pos % s
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        ck = _scatter_time(cache["k"], k, slot)
+        cv = _scatter_time(cache["v"], v, slot)
+        cpos = _scatter_time(cache["k_pos"][:, :, None],
+                             pos[:, None, None], slot)[:, :, 0]
+        ck = sharder.act(ck, "cache_kv")
+        cv = sharder.act(cv, "cache_kv")
+        logits = jnp.einsum("btkgh,bskh->bkgts",
+                            q.reshape(b, 1, kvh, g, hd).astype(jnp.float32),
+                            ck.astype(jnp.float32)) * scale
+        valid = (cpos >= 0) & (cpos <= pos[:, None])         # (B, S)
+        if kind == "window":
+            valid &= cpos > (pos[:, None] - window)
+        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+        pattn = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgts,bskh->btkgh", pattn, cv.astype(jnp.float32))
+        out = out.astype(x.dtype)
+        new_cache = {"k": ck, "v": cv, "k_pos": cpos}
+
+    out = out.reshape(b, t, h, hd)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return sharder.act(y, "act_resid"), new_cache
+
+
+def _scatter_time(cache, new, pos):
+    """cache (B,S,...) ← new (B,1,...) written at per-row position pos (B,)."""
+    s = cache.shape[1]
+    oh = jax.nn.one_hot(pos, s, dtype=cache.dtype)           # (B, S)
+    oh = oh.reshape(oh.shape + (1,) * (cache.ndim - 2))
+    return cache * (1 - oh) + oh * new.astype(cache.dtype)
+
+
+# --------------------------------------------------------------- MLA -------
+
+def init_mla(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = split_keys(key, 7)
+    return {
+        "wdq": dense_init(ks[0], (d, ql), dtype),
+        "q_norm": jnp.zeros((ql,), dtype),
+        "wuq": dense_init(ks[1], (ql, h * (dn + dr)), dtype
+                          ).reshape(ql, h, dn + dr),
+        "wdkv": dense_init(ks[2], (d, kvl + dr), dtype),
+        "kv_norm": jnp.zeros((kvl,), dtype),
+        "wuk": dense_init(ks[3], (kvl, h * dn), dtype).reshape(kvl, h, dn),
+        "wuv": dense_init(ks[4], (kvl, h * dv), dtype).reshape(kvl, h, dv),
+        "wo": dense_init(ks[5], (h * dv, d), dtype).reshape(h, dv, d),
+    }
+
+
+def _mla_attend(q_lat, q_rope, ckv, krope_r, q_pos, k_pos, scale):
+    """q_lat (B,Tq,H,kvl), q_rope (B,Tq,H,dr), ckv (B,S,kvl),
+    krope_r (B,S,dr); q_pos (B,Tq) or (Tq,); k_pos (S,).
+    Returns o_lat (B,Tq,H,kvl)."""
+    logits = (jnp.einsum("bthr,bsr->bhts", q_lat.astype(jnp.float32),
+                         ckv.astype(jnp.float32)) +
+              jnp.einsum("bthk,bsk->bhts", q_rope.astype(jnp.float32),
+                         krope_r.astype(jnp.float32))) * scale
+    if q_pos.ndim == 1:
+        valid = (k_pos[None, :] <= q_pos[:, None])[None, None]    # (1,1,Tq,S)
+    else:
+        valid = (k_pos[None, None, :] <= q_pos[:, :, None])[:, None]
+    logits = jnp.where(valid, logits, NEG_INF)
+    pattn = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bsr->bthr", pattn, ckv.astype(jnp.float32))
+
+
+def mla_apply(p, x, *, cfg, kind: str = "causal",
+              cache: Optional[dict] = None, pos: Optional[jax.Array] = None,
+              sharder=NO_SHARD, q_chunk: int = Q_CHUNK):
+    """DeepSeek-V3 MLA, absorbed form: attention runs in the kv_lora latent
+    space; the cache stores only (c_kv, k_rope) — the paper-faithful
+    compressed cache.  Prefill scans over query chunks (no (T,S) score
+    tensor)."""
+    b, t, d = x.shape
+    h = cfg.n_heads
+    kvl, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                       cfg.v_head_dim)
+    scale = (dn + dr) ** -0.5
+
+    cq = rms_norm(jnp.einsum("btd,dr->btr", x, p["wdq"]), p["q_norm"],
+                  cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", cq, p["wuq"])            # (B,T,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    dkv = jnp.einsum("btd,dr->btr", x, p["wdkv"])            # (B,T,kvl+dr)
+    ckv_new = rms_norm(dkv[..., :kvl], p["kv_norm"], cfg.norm_eps)
+    krope_new = dkv[..., kvl:]                               # (B,T,dr) shared
+
+    # absorb W_uk into the query: q_lat (B,T,H,kvl)
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, p["wuk"])
+    q_lat = sharder.act(q_lat, "act_qkv")
+
+    if cache is None:
+        ckv, krope = ckv_new, krope_new
+        s = t
+        k_pos = jnp.arange(s)
+        q_rope = apply_rope(q_rope, jnp.arange(t)[None, :], cfg.rope_theta)
+        krope_r = apply_rope(krope[:, :, None, :], k_pos[None, :],
+                             cfg.rope_theta)[:, :, 0]
+        nq = max(t // q_chunk, 1)
+        cqn = t // nq
+
+        def chunk(carry, idx):
+            ql_c = lax.dynamic_slice_in_dim(q_lat, idx * cqn, cqn, axis=1)
+            qr_c = lax.dynamic_slice_in_dim(q_rope, idx * cqn, cqn, axis=1)
+            p_c = lax.dynamic_slice_in_dim(k_pos, idx * cqn, cqn, axis=0)
+            return carry, _mla_attend(ql_c, qr_c, ckv, krope_r, p_c, k_pos,
+                                      scale)
+
+        chunk = jax.checkpoint(
+            chunk, policy=jax.checkpoint_policies.nothing_saveable)
+        _, chunks = lax.scan(chunk, None, jnp.arange(nq))
+        o_lat = jnp.moveaxis(chunks, 0, 1).reshape(b, t, h, kvl)
+    else:
+        ckv = _scatter_time(cache["ckv"], ckv_new, pos)
+        krope = _scatter_time(cache["krope"], krope_new, pos)
+        ckv = sharder.act(ckv, "cache_mla")
+        s = ckv.shape[1]
+        k_pos = jnp.arange(s)
+        q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+        krope_r = apply_rope(krope[:, :, None, :], k_pos[None, :],
+                             cfg.rope_theta)[:, :, 0]
+        o_lat = _mla_attend(q_lat, q_rope, ckv, krope_r, pos[:, None], k_pos,
+                            scale)
+
+    out = jnp.einsum("bthr,rhv->bthv", o_lat.astype(x.dtype), p["wuv"])
+    y = jnp.einsum("bthv,hvd->btd", out, p["wo"])
+    return sharder.act(y, "act_resid"), {"ckv": ckv, "krope": krope}

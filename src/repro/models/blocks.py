@@ -1,0 +1,180 @@
+"""Layer blocks: (mixer, ffn) pairs with pre-norms and residuals, plus the
+segment "program" that groups a config's layers into scannable runs.
+
+A segment is ``(repeats, unit)`` where ``unit`` is a tuple of per-layer
+(mixer_kind, ffn_kind) signatures; parameters of a segment are stacked over
+``repeats`` and scanned (compile-time O(1) in depth).  Heterogeneous tails
+(e.g. gemma3-4b's 34 = 5×6 + 4 layers) fall back to single-layer segments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm, dense_init, split_keys
+from .attention import init_gqa, gqa_apply, init_mla, mla_apply
+from .ffn import (init_mlp, mlp_apply, init_moe, moe_apply, init_rwkv_cm,
+                  rwkv_cm_apply)
+from .rwkv import init_rwkv, rwkv_apply
+from .mamba import init_mamba, mamba_apply, d_inner_of
+from .shard import NO_SHARD
+
+Sig = Tuple[str, str]  # (mixer kind, ffn kind)
+
+
+@dataclasses.dataclass
+class ModelCtx:
+    """Execution context threaded through apply fns."""
+    mesh: Any = None
+    moe_mode: str = "dense"           # dense | allreduce | alltoall
+    sharder: Any = NO_SHARD
+    remat: bool = True
+    wkv_chunk: int = 64
+    q_chunk: int = 512
+
+
+def layer_sigs(cfg) -> List[Sig]:
+    return [(cfg.kind_of_layer(l), cfg.ffn_of_layer(l))
+            for l in range(cfg.n_layers)]
+
+
+def build_program(cfg) -> List[Tuple[int, Tuple[Sig, ...]]]:
+    """Greedy segmentation of the layer signature list."""
+    sigs = layer_sigs(cfg)
+    sp = len(cfg.pattern)
+    if cfg.is_moe and cfg.moe_every > 1:
+        import math
+        sp = sp * cfg.moe_every // math.gcd(sp, cfg.moe_every)
+    segments: List[Tuple[int, Tuple[Sig, ...]]] = []
+    i, n = 0, len(sigs)
+    while i < n:
+        unit = tuple(sigs[i:i + sp])
+        reps = 0
+        j = i
+        while j + sp <= n and tuple(sigs[j:j + sp]) == unit:
+            reps += 1
+            j += sp
+        if reps >= 1 and len(unit) == sp:
+            segments.append((reps, unit))
+            i = j
+        else:
+            segments.append((1, (sigs[i],)))
+            i += 1
+    return segments
+
+
+# ------------------------------------------------------------- blocks ------
+
+_MIXER_INIT = {"attn": init_gqa, "swa": init_gqa, "mla": init_mla,
+               "mamba": init_mamba, "rwkv": init_rwkv}
+
+
+def init_block(key, cfg, sig: Sig, dtype) -> Dict:
+    kind, ffn_kind = sig
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": jnp.zeros((d,), dtype),
+        "mixer": _MIXER_INIT[kind](k1, cfg, dtype),
+        "norm2": jnp.zeros((d,), dtype),
+    }
+    if ffn_kind == "moe":
+        p["ffn"] = init_moe(k2, cfg, dtype)
+    elif ffn_kind == "rwkv_cm":
+        p["ffn"] = init_rwkv_cm(k2, d, cfg.d_ff, dtype)
+    elif ffn_kind == "mlp":
+        p["ffn"] = init_mlp(k2, d, cfg.d_ff, dtype, gated=False)
+    else:  # glu
+        p["ffn"] = init_mlp(k2, d, cfg.d_ff, dtype, gated=True)
+    return p
+
+
+def init_block_cache(cfg, sig: Sig, batch: int, seq: int, dtype):
+    """Decode-time cache for one layer."""
+    kind, ffn_kind = sig
+    d, kv, hd = cfg.d_model, cfg.n_kv_heads, cfg.head_dim
+    c: Dict[str, Any] = {}
+    if kind in ("attn", "swa"):
+        s = min(seq, cfg.sliding_window) if (
+            kind == "swa" and cfg.sliding_window) else seq
+        c["k"] = jnp.zeros((batch, s, kv, hd), dtype)
+        c["v"] = jnp.zeros((batch, s, kv, hd), dtype)
+        c["k_pos"] = jnp.full((batch, s), -1, jnp.int32)
+    elif kind == "mla":
+        c["ckv"] = jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype)
+        c["krope"] = jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype)
+    elif kind == "mamba":
+        c["conv"] = jnp.zeros((batch, cfg.mamba_d_conv - 1, d_inner_of(cfg)),
+                              dtype)
+        c["ssm"] = jnp.zeros((batch, d_inner_of(cfg), cfg.mamba_d_state),
+                             jnp.float32)
+    elif kind == "rwkv":
+        n = cfg.rwkv_head_dim
+        c["shift"] = jnp.zeros((batch, 1, d), dtype)
+        c["wkv"] = jnp.zeros((batch, d // n, n, n), jnp.float32)
+    if ffn_kind == "rwkv_cm":
+        c["cm_shift"] = jnp.zeros((batch, 1, d), dtype)
+    return c
+
+
+def block_apply(p, x, *, cfg, sig: Sig, ctx: ModelCtx,
+                cache: Optional[dict] = None,
+                pos: Optional[jax.Array] = None):
+    """Returns (x, new_cache, aux_loss)."""
+    kind, ffn_kind = sig
+    sharder = ctx.sharder
+    aux = jnp.zeros((), jnp.float32)
+
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache: Dict[str, Any] = {}
+    if kind in ("attn", "swa"):
+        attn_kind = ("bidir" if cfg.is_encoder else
+                     ("window" if kind == "swa" and cfg.sliding_window
+                      else "causal"))
+        mixer_cache = ({k: cache[k] for k in ("k", "v", "k_pos")}
+                       if cache is not None else None)
+        out, mc = gqa_apply(p["mixer"], h, cfg=cfg, kind=attn_kind,
+                            cache=mixer_cache, pos=pos, sharder=sharder,
+                            q_chunk=ctx.q_chunk)
+        new_cache.update(mc)
+    elif kind == "mla":
+        mixer_cache = ({k: cache[k] for k in ("ckv", "krope")}
+                       if cache is not None else None)
+        out, mc = mla_apply(p["mixer"], h, cfg=cfg, cache=mixer_cache,
+                            pos=pos, sharder=sharder, q_chunk=ctx.q_chunk)
+        new_cache.update(mc)
+    elif kind == "mamba":
+        mixer_cache = ({k: cache[k] for k in ("conv", "ssm")}
+                       if cache is not None else None)
+        out, mc = mamba_apply(p["mixer"], h, cfg=cfg, state=mixer_cache,
+                              sharder=sharder)
+        new_cache.update(mc)
+    elif kind == "rwkv":
+        mixer_cache = ({"shift": cache["shift"], "wkv": cache["wkv"]}
+                       if cache is not None else None)
+        out, mc = rwkv_apply(p["mixer"], h, cfg=cfg, state=mixer_cache,
+                             sharder=sharder, chunk=ctx.wkv_chunk)
+        new_cache.update(mc)
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if ffn_kind == "moe":
+        y, aux = moe_apply(p["ffn"], h2, cfg=cfg, mesh=ctx.mesh,
+                           mode=ctx.moe_mode, sharder=sharder)
+    elif ffn_kind == "rwkv_cm":
+        prev = (cache["cm_shift"] if cache is not None else
+                jnp.zeros_like(h2[:, :1]))
+        y, cm_state = rwkv_cm_apply(p["ffn"], h2, x_prev=prev,
+                                    sharder=sharder)
+        new_cache["cm_shift"] = cm_state
+    elif ffn_kind == "mlp":
+        y = mlp_apply(p["ffn"], h2, gated=False, sharder=sharder)
+    else:
+        y = mlp_apply(p["ffn"], h2, gated=True, sharder=sharder)
+    x = x + y
+    return x, new_cache, aux

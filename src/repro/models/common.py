@@ -1,0 +1,60 @@
+"""Shared model components: norms, rotary embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D) — rotate pairs (x[..0::2], x[..1::2]).
+
+    positions: (..., T) int32.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., T, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., 0::2], x32[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def dense_init(key: jax.Array, shape, dtype, fan_in: int | None = None):
+    fan_in = shape[0] if fan_in is None else fan_in
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (d ** -0.5)).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))

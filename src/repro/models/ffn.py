@@ -1,0 +1,266 @@
+"""Feed-forward blocks: dense MLP/GLU and Mixture-of-Experts.
+
+MoE runs in one of three modes:
+
+- ``dense``   — every expert computed for every token, combined by sparse
+                router weights.  Only for reduced smoke configs (≤4 experts).
+- ``allreduce`` — paper-faithful spatial style (DESIGN.md §3): tokens are
+                replicated over the ``model`` axis, experts are sharded;
+                each device computes its resident experts' capacity buffer
+                and a psum combines partial token outputs — the direct
+                analogue of Alg. 2's partial-neighbor-sum + all-reduce.
+- ``alltoall`` — beyond-paper optimized expert parallelism: tokens are also
+                split over ``model`` for dispatch; two all-to-alls move only
+                the routed tokens (see EXPERIMENTS.md §Perf).
+
+Expert count is padded to a multiple of 16 so expert weights shard on any
+production mesh (dummy experts are unroutable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init, split_keys
+from .shard import NO_SHARD
+
+EXPERT_PAD = 16
+
+
+def padded_experts(n: int) -> int:
+    return -(-n // EXPERT_PAD) * EXPERT_PAD
+
+
+# ------------------------------------------------------------- dense -------
+
+def init_mlp(key, d: int, d_ff: int, dtype, gated: bool):
+    ks = split_keys(key, 3)
+    p = {"wu": dense_init(ks[0], (d, d_ff), dtype),
+         "wo": dense_init(ks[1], (d_ff, d), dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], (d, d_ff), dtype)
+    return p
+
+
+def mlp_apply(p, x, *, gated: bool, sharder=NO_SHARD):
+    up = jnp.einsum("btd,df->btf", x, p["wu"])
+    if gated:
+        gate = jnp.einsum("btd,df->btf", x, p["wg"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = sharder.act(h, "act_ffn")
+    y = jnp.einsum("btf,fd->btd", h, p["wo"])
+    return sharder.act(y, "act_resid")
+
+
+# ------------------------------------------------------------- RWKV CM -----
+
+def init_rwkv_cm(key, d: int, d_ff: int, dtype):
+    ks = split_keys(key, 3)
+    return {"wr": dense_init(ks[0], (d, d), dtype),
+            "wk": dense_init(ks[1], (d, d_ff), dtype),
+            "wv": dense_init(ks[2], (d_ff, d), dtype),
+            "mu_r": jnp.full((d,), 0.5, dtype),
+            "mu_k": jnp.full((d,), 0.5, dtype)}
+
+
+def rwkv_cm_apply(p, x, *, x_prev, sharder=NO_SHARD):
+    """RWKV channel-mix with token shift. x (B,T,d); x_prev (B,1,d) is the
+    last token of the previous segment (state for decode).
+    Returns (out, new_x_prev)."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xr = x + (shifted - x) * p["mu_r"]
+    xk = x + (shifted - x) * p["mu_k"]
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"]))
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk"])))
+    k = sharder.act(k, "act_ffn")
+    y = r * jnp.einsum("btf,fd->btd", k, p["wv"])
+    return sharder.act(y, "act_resid"), x[:, -1:]
+
+
+# --------------------------------------------------------------- MoE -------
+
+def init_moe(key, cfg, dtype):
+    d, e = cfg.d_model, cfg.n_experts
+    ep = padded_experts(e)
+    ffe = cfg.d_ff_expert or cfg.d_ff
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "ewg": dense_init(ks[1], (ep, d, ffe), dtype, fan_in=d),
+        "ewu": dense_init(ks[2], (ep, d, ffe), dtype, fan_in=d),
+        "ewo": dense_init(ks[3], (ep, ffe, d), dtype, fan_in=ffe),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, ffe * cfg.n_shared_experts, dtype,
+                               gated=True)
+    return p
+
+
+def _route(router_w, x_flat, k: int):
+    """Returns (ids (T,k), weights (T,k) renormalized, aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch-style): E * Σ_e f_e · P_e
+    e = router_w.shape[1]
+    f = jnp.mean(jax.nn.one_hot(ids, e, dtype=jnp.float32).sum(1), axis=0)
+    pmean = probs.mean(0)
+    aux = e * jnp.sum(f * pmean)
+    return ids, w.astype(x_flat.dtype), aux
+
+
+def _expert_ffn(wg, wu, wo, xb):
+    """xb (E_loc, C, d) → (E_loc, C, d) through per-expert GLU."""
+    g = jnp.einsum("ecd,edf->ecf", xb, wg)
+    u = jnp.einsum("ecd,edf->ecf", xb, wu)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wo)
+
+
+def moe_dense_apply(p, x, *, cfg, sharder=NO_SHARD):
+    """Compute-all-experts reference (smoke tests + correctness oracle)."""
+    b, t, d = x.shape
+    e = cfg.n_experts
+    xf = x.reshape(b * t, d)
+    ids, w, aux = _route(p["router"], xf, cfg.experts_per_token)
+    gates = jnp.zeros((b * t, e), x.dtype)
+    gates = gates.at[jnp.arange(b * t)[:, None], ids].add(w)
+    # all experts for all tokens (E small in reduced configs)
+    g = jnp.einsum("td,edf->etf", xf, p["ewg"][:e])
+    u = jnp.einsum("td,edf->etf", xf, p["ewu"][:e])
+    yo = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * u, p["ewo"][:e])
+    y = jnp.einsum("te,etd->td", gates, yo)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, gated=True,
+                          sharder=sharder).reshape(b * t, d)
+    return y.reshape(b, t, d), aux
+
+
+def _gather_capacity(w_te, c: int):
+    """w_te (T, E_loc) combine weights (0 where unrouted).  Per expert, pick
+    the top-C tokens.  Returns (idx (E_loc, C) token ids, wsel (E_loc, C))."""
+    wt = w_te.T                                   # (E_loc, T)
+    wsel, idx = lax.top_k(wt.astype(jnp.float32), c)
+    return idx, wsel.astype(w_te.dtype)
+
+
+def _moe_local(p, xf, cfg, e_first, e_local, capacity):
+    """Local-expert compute: xf (T, d) tokens visible on this device;
+    experts [e_first, e_first + e_local).  Returns partial output (T, d)
+    and aux loss."""
+    t, d = xf.shape
+    ids, w, aux = _route(p["router"], xf, cfg.experts_per_token)
+    # combine-weight matrix for local experts only: (T, E_loc)
+    le = ids[:, :, None] - (e_first + jnp.arange(e_local))[None, None, :]
+    w_te = jnp.sum(jnp.where(le == 0, w[:, :, None], 0.0), axis=1)
+    idx, wsel = _gather_capacity(w_te, capacity)
+    xb = xf[idx.reshape(-1)].reshape(e_local, capacity, d)
+    yb = _expert_ffn(p["wg_loc"], p["wu_loc"], p["wo_loc"], xb)
+    yb = yb * wsel[..., None]
+    out = jnp.zeros((t, d), xf.dtype).at[idx.reshape(-1)].add(
+        yb.reshape(-1, d))
+    return out, aux
+
+
+def moe_sharded_apply(p, x, *, cfg, mesh, mode: str = "allreduce",
+                      capacity_factor: float = 1.25, sharder=NO_SHARD,
+                      data_axes=("data",), model_axis="model"):
+    """Expert-parallel MoE inside shard_map (see module docstring)."""
+    ep = padded_experts(cfg.n_experts)
+    m = mesh.shape[model_axis]
+    e_local = ep // m
+    b, t, d = x.shape
+    import math
+    dsize = max(1, math.prod(mesh.shape[a] for a in data_axes))
+    if b % dsize == 0:
+        b_loc = b // dsize
+        bspec = data_axes
+    else:
+        # batch not shardable over data (e.g. decode with global_batch=1):
+        # tokens replicated over the data axes, experts still model-sharded
+        b_loc = b
+        bspec = None
+    # alltoall mode additionally shards the sequence over `model` at the
+    # shard_map boundary — no token replication, so backward emits no
+    # (B, T, d) psum over model (§Perf deepseek iteration 2)
+    seq_sharded = mode == "alltoall" and t % m == 0 and t >= m
+    mode = "alltoall" if mode == "alltoall_rep" else mode
+    x_spec = P(bspec, "model" if seq_sharded else None, None)
+    tok_loc = b_loc * t
+
+    expert_specs = {"router": P(), "ewg": P(model_axis),
+                    "ewu": P(model_axis), "ewo": P(model_axis)}
+
+    def local_fn(router, wg, wu, wo, xl):
+        """Manual over (data..., model): xl (B_loc, T, d) replicated over
+        model."""
+        my = lax.axis_index(model_axis)
+        pl = {"router": router, "wg_loc": wg, "wu_loc": wu, "wo_loc": wo}
+        xf = xl.reshape(-1, d)
+        if mode == "allreduce":
+            cap = min(max(int(tok_loc * cfg.experts_per_token / ep *
+                              capacity_factor), 1), tok_loc)
+            out, aux = _moe_local(pl, xf, cfg, my * e_local, e_local, cap)
+            out = lax.psum(out, model_axis)
+            aux = lax.pmean(aux, model_axis)
+        elif mode == "alltoall":
+            if seq_sharded:
+                xc = xf                           # already the local chunk
+            else:
+                tc0 = xf.shape[0] // m
+                xc = lax.dynamic_slice_in_dim(xf, my * tc0, tc0, axis=0)
+            tc = xc.shape[0]
+            ids, w, aux = _route(pl["router"], xc, cfg.experts_per_token)
+            cap = min(max(int(tc * cfg.experts_per_token / ep *
+                              capacity_factor), 1), tc)
+            # per-GLOBAL-expert capacity buffer from the local chunk
+            le = ids[:, :, None] - jnp.arange(ep)[None, None, :]
+            w_te = jnp.sum(jnp.where(le == 0, w[:, :, None], 0.0), axis=1)
+            idx, wsel = _gather_capacity(w_te, cap)          # (ep, cap)
+            xb = xc[idx.reshape(-1)].reshape(m, e_local, cap, d)
+            # all-to-all: device j receives every peer's buffer for ITS experts
+            xb = lax.all_to_all(xb, model_axis, split_axis=0, concat_axis=0,
+                                tiled=False)
+            yb = _expert_ffn(wg, wu, wo,
+                             xb.transpose(1, 0, 2, 3).reshape(
+                                 e_local, m * cap, d))
+            yb = yb.reshape(e_local, m, cap, d).transpose(1, 0, 2, 3)
+            yb = lax.all_to_all(yb, model_axis, split_axis=0, concat_axis=0,
+                                tiled=False)                  # back to source
+            yb = yb.reshape(ep, cap, d) * wsel[..., None]
+            outc = jnp.zeros((tc, d), xf.dtype).at[idx.reshape(-1)].add(
+                yb.reshape(-1, d))
+            aux = lax.pmean(aux, model_axis)
+            if seq_sharded:
+                out = outc                        # stays sequence-sharded
+            else:
+                out = lax.all_gather(outc, model_axis, axis=0, tiled=True)
+        else:
+            raise ValueError(mode)
+        return out.reshape(xl.shape), aux
+
+    in_specs = (expert_specs["router"], expert_specs["ewg"],
+                expert_specs["ewu"], expert_specs["ewo"], x_spec)
+    out_specs = (x_spec, P())
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    y, aux = fn(p["router"], p["ewg"], p["ewu"], p["ewo"], x)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, gated=True, sharder=sharder)
+    return sharder.act(y, "act_resid"), aux
+
+
+def moe_apply(p, x, *, cfg, mesh=None, mode: str = "dense",
+              sharder=NO_SHARD):
+    if mode == "dense" or mesh is None:
+        return moe_dense_apply(p, x, cfg=cfg, sharder=sharder)
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    return moe_sharded_apply(p, x, cfg=cfg, mesh=mesh, mode=mode,
+                             sharder=sharder, data_axes=data_axes)

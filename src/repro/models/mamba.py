@@ -1,0 +1,108 @@
+"""Mamba selective-SSM mixer (Jamba's recurrent layer, [arXiv:2403.19887]).
+
+Diagonal selective scan: h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t,
+y_t = C_t·h_t + D x_t.  Baseline uses lax.scan over time (compile-friendly);
+the chunked variant is a §Perf candidate.
+
+State for decode: {"conv": (B, d_conv-1, d_inner), "ssm": (B, d_inner, d_state)}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import dense_init, split_keys
+from .shard import NO_SHARD
+
+
+def d_inner_of(cfg) -> int:
+    return cfg.mamba_expand * cfg.d_model
+
+
+def dt_rank_of(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    di = d_inner_of(cfg)
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dtr = dt_rank_of(cfg)
+    ks = split_keys(key, 6)
+    f32 = jnp.float32
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=f32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype, fan_in=dc),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, f32),   # softplus ≈ 0.01 init
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), f32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv along T. x (B,T,di), w (dc,di).
+
+    conv_state (B, dc-1, di) holds the trailing context for decode.
+    Returns (y, new_conv_state)."""
+    bsz, t, di = x.shape
+    dc = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((bsz, dc - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)            # (B, T+dc-1, di)
+    y = sum(xp[:, i:i + t] * w[i][None, None, :] for i in range(dc))
+    new_state = xp[:, -(dc - 1):] if dc > 1 else jnp.zeros(
+        (bsz, 0, di), x.dtype)
+    return y + b[None, None, :], new_state
+
+
+def mamba_apply(p, x, *, cfg, state: Optional[dict] = None, sharder=NO_SHARD):
+    """Returns (out (B,T,d), new_state)."""
+    bsz, t, d = x.shape
+    di = d_inner_of(cfg)
+    ds = cfg.mamba_d_state
+    dtr = dt_rank_of(cfg)
+    f32 = jnp.float32
+
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = sharder.act(xin, "act_ffn")
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = jnp.einsum("bte,ef->btf", xc, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,re->bte", proj[..., :dtr], p["dt_proj"]
+                   ).astype(f32) + p["dt_bias"])             # (B,T,di)
+    bmat = proj[..., dtr:dtr + ds].astype(f32)               # (B,T,ds)
+    cmat = proj[..., dtr + ds:].astype(f32)                  # (B,T,ds)
+    a = -jnp.exp(p["A_log"])                                 # (di, ds)
+
+    h0 = state["ssm"].astype(f32) if state is not None else jnp.zeros(
+        (bsz, di, ds), f32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp     # (B,di),(B,ds),(B,ds),(B,di)
+        da = jnp.exp(dt_t[:, :, None] * a[None])             # (B,di,ds)
+        h = da * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, c_t)
+        return h, y
+
+    xc32 = xc.astype(f32)
+    h, ys = lax.scan(step, h0, (dt.swapaxes(0, 1), bmat.swapaxes(0, 1),
+                                cmat.swapaxes(0, 1), xc32.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + p["D"][None, None, :] * xc32     # (B,T,di)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    new_state = {"conv": new_conv, "ssm": h.astype(f32)}
+    return sharder.act(out, "act_resid"), new_state

@@ -1,0 +1,159 @@
+"""RWKV-6 ("Finch") time-mix block with data-dependent decay
+[arXiv:2404.05892], plus a chunked jnp WKV core mirroring the Pallas kernel
+math (kernels/wkv6.py) — the TPU-native formulation: (C×C) masked matmuls on
+the MXU instead of a token-serial CUDA kernel.
+
+State for decode: {"shift": (B,1,D) last token, "wkv": (B,H,N,N)}.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import dense_init, split_keys
+from .shard import NO_SHARD
+
+LORA_MIX = 5  # w, k, v, r, g
+
+
+def init_rwkv(key, cfg, dtype):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    lo = cfg.rwkv_lora_dim
+    ks = split_keys(key, 12)
+    f32 = jnp.float32
+    return {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "maa": jnp.zeros((LORA_MIX, d), dtype),              # per-stream mus
+        "mix_w1": dense_init(ks[0], (d, LORA_MIX * lo), dtype),
+        "mix_w2": dense_init(ks[1], (LORA_MIX, lo, d), dtype, fan_in=lo),
+        "w0": jnp.full((d,), -0.6, f32),                     # decay base
+        "td_w1": dense_init(ks[2], (d, 2 * lo), dtype),
+        "td_w2": dense_init(ks[3], (2 * lo, d), dtype, fan_in=2 * lo),
+        "u": (jax.random.normal(ks[4], (h, n), f32) * 0.1).astype(f32),
+        "wr": dense_init(ks[5], (d, d), dtype),
+        "wk": dense_init(ks[6], (d, d), dtype),
+        "wv": dense_init(ks[7], (d, d), dtype),
+        "wg": dense_init(ks[8], (d, d), dtype),
+        "wo": dense_init(ks[9], (d, d), dtype),
+        "ln_scale": jnp.ones((d,), f32),
+        "ln_bias": jnp.zeros((d,), f32),
+    }
+
+
+def wkv6_chunked_jnp(r, k, v, w, u, s0=None, chunk: int = 64):
+    """Chunked WKV (same math as kernels/wkv6.py, vectorized over BH).
+
+    r/k/w (BH,T,N), v (BH,T,N), u (BH,N). w = decay multiplier in (0,1].
+    Returns (out, final_state (BH,N,N))."""
+    bh, t, n = r.shape
+    c = min(chunk, t)
+    assert t % c == 0
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    lw = jnp.log(jnp.clip(w, 1e-6, 1.0))
+    nc = t // c
+    rs = r.reshape(bh, nc, c, n)
+    ks_ = k.reshape(bh, nc, c, n)
+    vs = v.reshape(bh, nc, c, n)
+    lws = lw.reshape(bh, nc, c, n)
+    u = u.astype(f32)
+    if s0 is None:
+        s0 = jnp.zeros((bh, n, n), f32)
+
+    ti = jnp.arange(c)[:, None]
+    si = jnp.arange(c)[None, :]
+    tri = (si < ti).astype(f32)                              # strict lower
+
+    def step(s, inp):
+        rc, kc, vc, lwc = inp                                # (bh, c, n)
+        cum = jnp.cumsum(lwc, axis=1)
+        qp = rc * jnp.exp(cum - lwc)
+        kp = kc * jnp.exp(-cum)
+        a = jnp.einsum("bti,bsi->bts", qp, kp) * tri[None]
+        diag = jnp.sum(rc * u[:, None, :] * kc, axis=-1)     # (bh, c)
+        a = a + jnp.eye(c, dtype=f32)[None] * diag[:, :, None]
+        o = jnp.einsum("bts,bsj->btj", a, vc) + jnp.einsum(
+            "bti,bij->btj", qp, s)
+        cl = cum[:, -1]                                      # (bh, n)
+        kd = kc * jnp.exp(cl[:, None, :] - cum)
+        s = jnp.exp(cl)[:, :, None] * s + jnp.einsum("bci,bcj->bij", kd, vc)
+        return s, o
+
+    s, outs = lax.scan(step, s0, (rs.swapaxes(0, 1), ks_.swapaxes(0, 1),
+                                  vs.swapaxes(0, 1), lws.swapaxes(0, 1)))
+    out = outs.swapaxes(0, 1).reshape(bh, t, n)
+    return out, s
+
+
+def _group_norm(x, scale, bias, h, n, eps=1e-5):
+    """Per-head LayerNorm over the head channel dim. x (B,T,D)."""
+    b, t, d = x.shape
+    xh = x.reshape(b, t, h, n).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * lax.rsqrt(var + eps)
+    out = xh.reshape(b, t, d) * scale + bias
+    return out
+
+
+def rwkv_apply(p, x, *, cfg, state: Optional[dict] = None, sharder=NO_SHARD,
+               chunk: int = 64):
+    """Time-mix block. Returns (out, new_state)."""
+    b, t, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    dtype = x.dtype
+
+    x_prev = state["shift"] if state is not None else jnp.zeros(
+        (b, 1, d), dtype)
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1) if t > 1 else x_prev
+    xx = shifted - x
+
+    # data-dependent token-shift (ddlerp)
+    xxx = x + xx * p["mu_x"]
+    mix = jnp.tanh(jnp.einsum("btd,dl->btl", xxx, p["mix_w1"]))
+    mix = mix.reshape(b, t, LORA_MIX, -1)
+    mix = jnp.einsum("btml,mld->btmd", mix, p["mix_w2"])     # (B,T,5,D)
+    xw, xk, xv, xr, xg = [
+        x + xx * (p["maa"][i] + mix[:, :, i]) for i in range(LORA_MIX)]
+
+    # data-dependent decay (w ∈ (0,1))
+    dd = jnp.einsum("btd,dl->btl", xw, p["td_w1"])
+    dd = jnp.einsum("btl,ld->btd", jnp.tanh(dd), p["td_w2"])
+    logw = -jnp.exp(jnp.clip(p["w0"] + dd.astype(jnp.float32), -8.0, 1.0))
+    w = jnp.exp(logw)                                        # decay multiplier
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"])
+    k = jnp.einsum("btd,de->bte", xk, p["wk"])
+    v = jnp.einsum("btd,de->bte", xv, p["wv"])
+    g = jnp.einsum("btd,de->bte", xg, p["wg"])
+    r = sharder.act(r, "act_qkv")
+
+    def heads(a):
+        return a.reshape(b, t, h, n).transpose(0, 2, 1, 3).reshape(
+            b * h, t, n)
+
+    s0 = state["wkv"].reshape(b * h, n, n) if state is not None else None
+    u = jnp.broadcast_to(p["u"][None], (b, h, n)).reshape(b * h, n)
+    if t == 1 and state is not None:
+        # decode: single recurrence step
+        rt, kt, vt, wt = (heads(a)[:, 0] for a in (r, k, v, w))
+        kv = kt[:, :, None] * vt[:, None, :]
+        o = jnp.einsum("bi,bij->bj", rt.astype(jnp.float32),
+                       s0 + u[:, :, None] * kv)
+        s_new = wt.astype(jnp.float32)[:, :, None] * s0 + kv
+        out_h = o[:, None, :]
+    else:
+        out_h, s_new = wkv6_chunked_jnp(heads(r), heads(k), heads(v),
+                                        heads(w), u, s0=s0, chunk=chunk)
+    out = out_h.reshape(b, h, t, n).transpose(0, 2, 1, 3).reshape(b, t, d)
+    out = _group_norm(out, p["ln_scale"], p["ln_bias"], h, n)
+    out = (out.astype(dtype)) * jax.nn.silu(g)
+    y = jnp.einsum("bte,ed->btd", out, p["wo"])
+    new_state = {"shift": x[:, -1:], "wkv": s_new.reshape(b, h, n, n)}
+    return sharder.act(y, "act_resid"), new_state

@@ -1,0 +1,45 @@
+"""Activation-sharding plumbing.
+
+Models call ``sharder.act(x, "<logical name>")`` at layout-critical points;
+the launcher builds a Sharder from the mesh + rule table in repro.sharding.
+On CPU smoke tests the default NoSharder is a no-op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+class NoSharder:
+    mesh = None
+
+    def act(self, x, name: str):
+        return x
+
+
+@dataclasses.dataclass
+class Sharder:
+    mesh: jax.sharding.Mesh
+    rules: Dict[str, PartitionSpec]
+
+    def act(self, x, name: str):
+        spec = self.rules.get(name)
+        if spec is None or len(spec) != x.ndim:
+            return x
+        # skip specs whose sharded dims don't divide this tensor
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            import math
+            size = math.prod(self.mesh.shape[a] for a in axes)
+            if x.shape[dim] % size != 0:
+                return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+NO_SHARD = NoSharder()

@@ -1,0 +1,1 @@
+from .adam import AdamState, adam_init, adam_update, clip_by_global_norm, cosine_schedule

@@ -1,0 +1,89 @@
+"""Adam optimizer (Kingma & Ba, paper §4.4 'Adam provided by PyTorch optim'),
+implemented over arbitrary pytrees in pure JAX.
+
+Used both by the paper's RL agent (lr 1e-5, paper §6.1) and by the LM
+substrate's train steps.  Supports fp32 moments over bf16 params, global-norm
+clipping and cosine/linear schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamState:
+    step: jax.Array          # () int32
+    mu: Any                  # pytree like params (fp32)
+    nu: Any                  # pytree like params (fp32)
+
+
+def adam_init(params: Any, *, moment_dtype=jnp.float32) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def adam_update(
+    params: Any,
+    grads: Any,
+    state: AdamState,
+    *,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[Any, AdamState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        mdtype = m.dtype                      # moments stored as configured
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(mdtype), v32.astype(mdtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        frac = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr_at

@@ -1,0 +1,2 @@
+from .analysis import (collective_bytes, roofline_terms, model_flops,
+                       HW, Hardware)

@@ -1,0 +1,247 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` reports per-device FLOPs/bytes (the SPMD module is the
+per-device program).  Collective bytes are parsed from the compiled HLO text:
+for each all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we read the (local) result shape + replica group size and
+apply ring-transfer formulas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)"
+                             r"\s*->\s*.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w\.\-]+),\s*"
+                       r"body=%?([\w\.\-]+)", re.S)
+_CONST_RE = re.compile(r"\b[su]32\[\]\s+constant\((\d+)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """TPU v5e (per chip)."""
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # B/s
+    link_bw: float = 50e9             # B/s per ICI link
+
+
+HW = Hardware()
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))            # [num_groups, group_size]
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def _line_bytes(line: str):
+    """(kind, moved_bytes) for a collective instruction line, else None."""
+    m = _COLL_RE.match(line)
+    if m is None or "-done(" in line:
+        return None                        # async pair: count -start only
+    type_str, kind = m.groups()
+    s = _shape_bytes(type_str)
+    g = _group_size(line)
+    if g <= 1:
+        return None
+    if kind == "all-reduce":
+        moved = 2.0 * s * (g - 1) / g
+    elif kind == "all-gather":
+        moved = s * (g - 1) / g
+    elif kind == "reduce-scatter":
+        moved = s * (g - 1)
+    elif kind == "all-to-all":
+        moved = s * (g - 1) / g
+    else:
+        moved = float(s)
+    return kind, moved
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        if name is None:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(1)
+                buf = []
+        else:
+            if line.strip() == "}":
+                comps[name] = buf
+                name = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved over links, by collective kind (ring model):
+
+      all-reduce      2·S·(g-1)/g     (S = local result bytes)
+      all-gather      S·(g-1)/g       (S = gathered local result)
+      reduce-scatter  S·(g-1)         (S = local shard result)
+      all-to-all      S·(g-1)/g
+      collective-permute  S
+
+    Collectives inside ``while`` bodies (lax.scan) are multiplied by the trip
+    count parsed from the loop-condition constant — XLA's own cost analysis
+    counts loop bodies once, which would understate scan-heavy models.
+    """
+    comps = _split_computations(hlo_text)
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = [int(m.group(1)) for l in lines
+                  for m in _CONST_RE.finditer(l)]
+        return max(consts) if consts else 1
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        acc = {k: 0.0 for k in kinds}
+        acc["count"] = 0.0
+        memo[name] = acc                   # guards cycles
+        for line in comps.get(name, []):
+            lb = _line_bytes(line)
+            if lb is not None:
+                acc[lb[0]] += lb[1]
+                acc["count"] += 1
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                trips = trip_count(cond)
+                sub = walk(body)
+                for k in kinds:
+                    acc[k] += trips * sub[k]
+                acc["count"] += trips * sub["count"]
+            elif "calls=" in line:
+                cm = re.search(r"calls=%?([\w\.\-]+)", line)
+                if cm and cm.group(1) in comps:
+                    sub = walk(cm.group(1))
+                    for k in kinds:
+                        acc[k] += sub[k]
+                    acc["count"] += sub["count"]
+        return acc
+
+    # entry = the computation containing the module's ROOT; heuristics: the
+    # one not referenced as body/cond/calls of another. Simpler: walk the one
+    # whose name starts with 'main' or take the last computation.
+    entry = None
+    for cand in comps:
+        if cand.startswith("main") or cand.endswith(".main"):
+            entry = cand
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    out = walk(entry) if entry else {k: 0.0 for k in kinds + ("count",)}
+    out = dict(out)
+    out["total"] = sum(out[k] for k in kinds)
+    return out
+
+
+def model_flops(cfg, shape_cfg, active_params: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), D = processed
+    tokens; MoE uses active parameters."""
+    if shape_cfg.mode == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * active_params * tokens
+    if shape_cfg.mode == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * active_params * tokens
+    tokens = shape_cfg.global_batch       # one new token per sequence
+    return 2.0 * active_params * tokens
+
+
+def active_param_count(cfg, params_shape) -> int:
+    """Parameter count with MoE expert tensors scaled by k/E (+ shared)."""
+    import jax
+    total = 0
+    frac = (cfg.experts_per_token / cfg.n_experts) if cfg.is_moe else 1.0
+
+    def visit(path, leaf):
+        nonlocal total
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        n = leaf.size
+        if cfg.is_moe and names[-1] in ("ewg", "ewu", "ewo"):
+            n = int(n * frac)
+        total += n
+
+    jax.tree_util.tree_map_with_path(visit, params_shape)
+    return total
+
+
+def roofline_terms(cost: dict, coll: Dict[str, float], chips: int,
+                   model_fl: float, *, analytic_fl: float = 0.0,
+                   analytic_bytes: float = 0.0, hw: Hardware = HW) -> dict:
+    """Per-device roofline terms in seconds.
+
+    FLOPs/bytes use max(HLO, analytic/chips): XLA cost analysis counts while
+    (scan) bodies once, so the HLO numbers are a lower bound for scan-based
+    models; the analytic model (roofline/analytic.py) provides the true
+    count.  Collective bytes come from the HLO parse, which multiplies loop
+    bodies by trip count itself.
+    """
+    hlo_flops_dev = float(cost.get("flops", 0.0))
+    hlo_bytes_dev = float(cost.get("bytes accessed", 0.0))
+    flops_dev = max(hlo_flops_dev, analytic_fl / chips)
+    bytes_dev = max(hlo_bytes_dev, analytic_bytes / chips)
+    t_compute = flops_dev / hw.peak_flops
+    t_memory = bytes_dev / hw.hbm_bw
+    t_coll = coll["total"] / hw.link_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    useful = model_fl / max(flops_dev * chips, 1.0)
+    return dict(terms, dominant=dom,
+                hlo_flops_per_dev=hlo_flops_dev,
+                hlo_bytes_per_dev=hlo_bytes_dev,
+                analytic_flops_global=analytic_fl,
+                analytic_bytes_global=analytic_bytes,
+                flops_per_dev_used=flops_dev,
+                bytes_per_dev_used=bytes_dev,
+                collective_bytes_per_dev=coll["total"],
+                collective_count=coll["count"],
+                model_flops=model_fl, useful_flops_ratio=useful,
+                step_time_bound_s=max(terms.values()))

@@ -1,0 +1,2 @@
+from .rules import (param_specs, activation_rules, batch_specs, cache_specs,
+                    data_axes_of)

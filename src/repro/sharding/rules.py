@@ -1,0 +1,264 @@
+"""Sharding rule tables: parameter specs, activation constraints and batch
+specs per (arch × shape × mesh).
+
+Baseline layout (the §Perf paper-faithful baseline): tensor parallelism over
+``model`` (heads / d_ff / experts / vocab), batch over ``data`` (and ``pod``),
+params replicated over data.  Options:
+
+- ``zero3=True``: layer params additionally sharded over ``data`` on their
+  largest replicated dim (ZeRO-3 / FSDP style) — §Perf candidate.
+- decode shapes shard the KV cache/state *spatially* (sequence or state dim
+  over ``model``) — the paper's spatial parallelism applied to serving.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def data_axes_of(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+# Per-leaf rules: name -> (dims-from-the-right, axis proposal per dim).
+# "M" = model axis, "D" = data axes (zero3), None = replicated.
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": ("M", "D"),
+    "frontend_proj": (None, "M"),
+    # attention
+    "wq": ("D", "M", None),
+    "wk": ("D", "M", None),
+    "wv": ("D", "M", None),
+    "wo": ("M", None, "D"),
+    # mla — down-projections replicate their small output dim: sharding
+    # q_lora/kv_lora would put an RMSNorm on a sharded axis (AR per q-chunk)
+    "wdq": ("D", None),
+    "wuq": ("D", "M", None),
+    "wdkv": ("D", None),
+    "wuk": (None, "M", "D"),
+    "wuv": (None, "M", "D"),
+    # mlp (wu/wg (d, f), wo handled above for attn; mlp wo is (f, d))
+    "wu": ("D", "M"),
+    "wg": ("D", "M"),
+    # moe experts (E, d, f) / (E, f, d)
+    "router": (None, None),
+    "ewg": ("M", "D", None),
+    "ewu": ("M", "D", None),
+    "ewo": ("M", None, "D"),
+    # rwkv
+    "wr": ("D", "M"),
+    "mix_w1": (None, None),
+    "mix_w2": (None, None, None),
+    "td_w1": (None, None),
+    "td_w2": (None, None),
+    # mamba
+    "in_proj": ("D", "M"),
+    "conv_w": (None, "M"),
+    "conv_b": ("M",),
+    "x_proj": ("M", "D"),
+    "dt_proj": ("D", "M"),
+    "A_log": ("M", None),
+    "D": ("M",),
+    "out_proj": ("M", "D"),
+}
+
+# mlp wo (f, d) vs attention wo (h, hd, d) disambiguated by the ffn subtree
+_MLP_WO = ("M", "D")
+
+
+def _leaf_rule(path, leaf) -> Tuple[Optional[str], ...]:
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    last = names[-1]
+    in_ffn = "ffn" in names or "shared" in names
+    if last == "wo":
+        return _MLP_WO if in_ffn else _PARAM_RULES["wo"]
+    if last in _PARAM_RULES:
+        return _PARAM_RULES[last]
+    return ()  # replicate (norms, biases, scalars)
+
+
+def param_specs(params_shape, mesh, *, zero3: bool = False,
+                layout: str = "tp"):
+    """PartitionSpec pytree matching an eval_shape'd params tree.
+
+    layout="tp"   — tensor parallelism over `model` (+ optional ZeRO-3).
+    layout="fsdp" — pure fully-sharded data parallelism: every leaf sharded
+                    over ALL mesh axes on its largest divisible dim; no
+                    tensor parallelism (the §Perf alternative for models
+                    that are collective-bound under 16-way TP).
+    """
+    msize = mesh.shape["model"]
+    daxes = data_axes_of(mesh)
+    dsize = math.prod(mesh.shape[a] for a in daxes)
+
+    if layout == "fsdp":
+        all_axes = tuple(mesh.axis_names)
+        asize = math.prod(mesh.shape[a] for a in all_axes)
+
+        def spec_fsdp(path, leaf):
+            names = [getattr(k, "key", getattr(k, "name", None))
+                     for k in path]
+            if names and names[-1] == "embed" and \
+                    _divisible(leaf.shape[0], msize):
+                # keep the vocab TP-sharded over `model` only: the loss
+                # einsum then never gathers the table (lse psums instead)
+                return P("model", None)
+            axes = [None] * leaf.ndim
+            order = sorted(range(leaf.ndim), key=lambda d: -leaf.shape[d])
+            for d in order:
+                if _divisible(leaf.shape[d], asize):
+                    axes[d] = all_axes
+                    return P(*axes)
+            # fall back: split axis groups over two dims
+            for d in order:
+                if _divisible(leaf.shape[d], msize):
+                    axes[d] = "model"
+                    for d2 in order:
+                        if d2 != d and _divisible(leaf.shape[d2], dsize):
+                            axes[d2] = daxes if len(daxes) > 1 else daxes[0]
+                            break
+                    return P(*axes)
+            for d in order:
+                if _divisible(leaf.shape[d], dsize):
+                    axes[d] = daxes if len(daxes) > 1 else daxes[0]
+                    return P(*axes)
+            return P(*axes)
+
+        return jax.tree_util.tree_map_with_path(spec_fsdp, params_shape)
+
+    def spec_of(path, leaf):
+        rule = _leaf_rule(path, leaf)
+        rank = leaf.ndim
+        axes = [None] * rank
+        # rule applies to the trailing len(rule) dims
+        off = rank - len(rule)
+        for i, r in enumerate(rule):
+            dim = off + i
+            size = leaf.shape[dim]
+            if r == "M" and _divisible(size, msize):
+                axes[dim] = "model"
+            elif r == "D" and zero3 and _divisible(size, dsize):
+                axes[dim] = daxes if len(daxes) > 1 else daxes[0]
+        if all(a is None for a in axes) and \
+                leaf.size * leaf.dtype.itemsize > 2 ** 21:
+            # big leaf whose tensor-parallel dim is unshardable (e.g. llava's
+            # 56 heads on a 16-wide model axis): shard over DATA instead
+            # (FSDP-style — costs one weight all-gather per use, which is far
+            # cheaper than the activation all-reduce that contraction-dim
+            # model sharding would induce).
+            dspec = daxes if len(daxes) > 1 else daxes[0]
+            cands = [d for d in range(rank)
+                     if axes[d] is None and _divisible(leaf.shape[d], dsize)]
+            if cands:
+                axes[max(cands, key=lambda d: leaf.shape[d])] = dspec
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def activation_rules(mesh, shape_cfg, *, layout: str = "tp") -> Dict[str, P]:
+    """Logical-name → spec table for the Sharder."""
+    daxes = data_axes_of(mesh)
+    if layout == "fsdp" and shape_cfg.mode == "train":
+        all_axes = tuple(mesh.axis_names)
+        asize = math.prod(mesh.shape[a] for a in all_axes)
+        bd = all_axes if _divisible(shape_cfg.global_batch, asize) else None
+        return {
+            "act_resid_in": P(bd, None, None),
+            "act_resid": P(bd, None, None),
+        }
+    d = daxes if len(daxes) > 1 else daxes[0]
+    batch_shardable = _divisible(shape_cfg.global_batch,
+                                 math.prod(mesh.shape[a] for a in daxes))
+    bd = d if batch_shardable else None
+    # layout="sp": Megatron-style sequence parallelism — the residual stream
+    # (and thus every remat-saved layer input) is sharded over `model` on the
+    # sequence dim; XLA turns the TP all-reduces into all-gather +
+    # reduce-scatter pairs around each mixer/FFN.
+    seq_ax = "model" if (layout == "sp" and shape_cfg.mode == "train") \
+        else None
+    rules = {
+        "act_resid_in": P(bd, seq_ax, None),
+        "act_resid": P(bd, seq_ax, None),
+        "act_qkv": P(bd, None, "model", None),
+        "act_ffn": P(bd, None, "model"),
+    }
+    if shape_cfg.mode == "decode":
+        # spatial sharding of the cache (paper technique → serving):
+        # sequence dim over model (+ data axes when batch==1)
+        seq_axes = ("model",) if batch_shardable else tuple(daxes) + ("model",)
+        sa = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+        rules.update({
+            "cache_kv": P(bd, sa, None, None),
+            "cache_mla": P(bd, sa, None),
+        })
+    return rules
+
+
+def batch_specs(batch_spec_tree, mesh, shape_cfg, *, layout: str = "tp"):
+    """Input shardings for the data batch: leading batch dim over data axes
+    (when divisible), rest replicated.  fsdp layout shards the batch over
+    every mesh axis."""
+    if layout == "fsdp" and shape_cfg.mode == "train":
+        daxes = tuple(mesh.axis_names)
+    else:
+        daxes = data_axes_of(mesh)
+    dsize = math.prod(mesh.shape[a] for a in daxes)
+    d = daxes if len(daxes) > 1 else daxes[0]
+
+    def spec_of(leaf):
+        if leaf.ndim >= 1 and _divisible(leaf.shape[0], dsize):
+            return P(*([d] + [None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec_of, batch_spec_tree)
+
+
+def cache_specs(cache_shape_tree, mesh, shape_cfg, batch: int):
+    """Decode-cache shardings (paper-spatial: long dims over model)."""
+    daxes = data_axes_of(mesh)
+    dsize = math.prod(mesh.shape[a] for a in daxes)
+    msize = mesh.shape["model"]
+    d = daxes if len(daxes) > 1 else daxes[0]
+    b_ok = _divisible(batch, dsize)
+
+    def spec_of(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        last = [n for n in names if isinstance(n, str)][-1]
+        axes = [None] * leaf.ndim
+        # stacked segment caches have extra leading dims; the batch dim is
+        # the first dim equal to `batch`
+        try:
+            bdim = leaf.shape.index(batch)
+        except ValueError:
+            bdim = None
+        if bdim is not None and b_ok and batch > 1:
+            axes[bdim] = d
+        if last in ("k", "v", "k_pos", "ckv", "krope"):
+            # sequence dim follows the batch dim
+            sdim = (bdim + 1) if bdim is not None else leaf.ndim - 2
+            want = ("model",) if (b_ok and batch > 1) else \
+                tuple(daxes) + ("model",)
+            size = leaf.shape[sdim]
+            if _divisible(size, math.prod(mesh.shape[a] for a in want)):
+                axes[sdim] = want if len(want) > 1 else want[0]
+        elif last in ("ssm", "conv"):
+            # d_inner dim over model
+            ddim = leaf.ndim - 2 if last == "ssm" else leaf.ndim - 1
+            if _divisible(leaf.shape[ddim], msize):
+                axes[ddim] = "model"
+        elif last == "wkv":
+            hdim = leaf.ndim - 3
+            if _divisible(leaf.shape[hdim], msize):
+                axes[hdim] = "model"
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shape_tree)

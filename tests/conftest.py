@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see the real (single) CPU device.  The
+# multi-pod dry-run sets XLA_FLAGS itself before importing jax — never here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,87 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graphs import (erdos_renyi, barabasi_albert, social_like,
+                               random_graph_batch, init_state,
+                               residual_adjacency, pad_nodes,
+                               to_padded_edgelist, edgelist_to_dense)
+
+
+def test_er_symmetric_no_selfloops():
+    a = erdos_renyi(50, 0.15, seed=0)
+    assert (a == a.T).all()
+    assert np.diag(a).sum() == 0
+
+
+def test_er_density_close():
+    a = erdos_renyi(400, 0.15, seed=1)
+    density = a.sum() / (400 * 399)
+    assert abs(density - 0.15) < 0.02
+
+
+def test_ba_edge_count():
+    n, d = 100, 4
+    a = barabasi_albert(n, d, seed=0)
+    assert (a == a.T).all()
+    m = a.sum() / 2
+    # seed clique + d per added node
+    expected = d * (d + 1) / 2 + (n - d - 1) * d
+    assert m == pytest.approx(expected, rel=0.01)
+
+
+def test_social_like_sparse():
+    a = social_like(300, seed=2)
+    assert (a == a.T).all()
+    rho = a.sum() / (300 * 299)
+    assert rho < 0.05
+
+
+def test_batch_stacking():
+    b = random_graph_batch("er", 30, 5, seed=0, rho=0.2)
+    assert b.shape == (5, 30, 30)
+    assert not np.array_equal(b[0], b[1])  # different seeds
+
+
+def test_init_state_candidates_are_nonisolated():
+    a = np.zeros((6, 6), np.float32)
+    a[0, 1] = a[1, 0] = 1
+    st_ = init_state(jnp.asarray(a))
+    assert np.asarray(st_.candidate)[0].tolist() == [1, 1, 0, 0, 0, 0]
+    assert np.asarray(st_.solution).sum() == 0
+
+
+@given(st.integers(4, 24), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_residual_adjacency_removes_rows_cols(n, seed):
+    a = erdos_renyi(n, 0.4, seed=seed)
+    rng = np.random.default_rng(seed)
+    sol = (rng.random(n) < 0.3).astype(np.float32)
+    res = np.asarray(residual_adjacency(jnp.asarray(a), jnp.asarray(sol)))
+    for v in np.nonzero(sol)[0]:
+        assert res[v].sum() == 0 and res[:, v].sum() == 0
+    keep = sol < 0.5
+    assert (res[np.ix_(keep, keep)] == a[np.ix_(keep, keep)]).all()
+
+
+def test_pad_nodes():
+    a = erdos_renyi(10, 0.3, seed=0)
+    p = pad_nodes(a, 4)
+    assert p.shape == (12, 12)
+    assert p[10:].sum() == 0 and p[:, 10:].sum() == 0
+
+
+@given(st.integers(3, 30), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_padded_edgelist_roundtrip(n, seed):
+    a = erdos_renyi(n, 0.3, seed=seed)
+    e = to_padded_edgelist(a)
+    back = edgelist_to_dense(e)
+    np.testing.assert_array_equal(a, back)
+
+
+def test_edgelist_memory_win():
+    a = erdos_renyi(200, 0.05, seed=0)
+    e = to_padded_edgelist(a)
+    assert e.nbytes() < a.astype(np.float32).nbytes

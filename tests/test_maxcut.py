@@ -1,0 +1,48 @@
+"""Extensibility check (paper Fig. 1): the same agent machinery learns a
+DIFFERENT graph problem (MaxCut) without code changes beyond the env name."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Agent, PolicyConfig, train_agent
+from repro.core.graphs import random_graph_batch, init_state
+from repro.core import env as env_lib
+
+
+def _cut_value(adj, solution):
+    s = solution
+    return float(np.einsum("ij,i,j->", adj, s, 1 - s))
+
+
+def _rollout_cut(agent, adj, steps):
+    """Greedy rollout with the current policy on the maxcut env."""
+    step_fn = env_lib.make("maxcut")
+    state = init_state(jnp.asarray(adj)[None])
+    total_r = 0.0
+    for _ in range(steps):
+        if float(state.candidate.sum()) == 0:
+            break
+        a = agent.act(state, explore=False)
+        state, r, done = step_fn(state, jnp.asarray(a))
+        total_r += float(np.asarray(r)[0])
+        if bool(np.asarray(done)[0]):
+            break
+    return _cut_value(adj, np.asarray(state.solution)[0])
+
+
+def test_maxcut_env_learns_positive_cut():
+    n = 14
+    train = random_graph_batch("er", n, 6, seed=11, rho=0.4)
+    test = random_graph_batch("er", n, 4, seed=912, rho=0.4)
+    cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=16,
+                       replay_capacity=1000, learning_rate=1e-3,
+                       eps_decay_steps=60)
+    agent = Agent(cfg, num_nodes=n)
+    before = np.mean([_rollout_cut(agent, a, n // 2) for a in test])
+    train_agent(agent, train, problem="maxcut", episodes=10 ** 6, tau=2,
+                max_steps=120, seed=3)
+    after = np.mean([_rollout_cut(agent, a, n // 2) for a in test])
+    # a trained policy should cut at least as much as the untrained one and
+    # be decently above the random-half expectation is tested loosely
+    assert after >= before * 0.8
+    assert after > 0

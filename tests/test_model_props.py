@@ -1,0 +1,110 @@
+"""Property tests for model primitives (hypothesis)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import apply_rope, rms_norm, layer_norm, rope_freqs
+
+
+@given(st.integers(0, 10_000), st.sampled_from([16, 32, 64]))
+@settings(max_examples=15, deadline=None)
+def test_rope_preserves_norm(seed, d):
+    """Rotation: per-head vector norms are invariant."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 6, 2, d)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 10_000, (1, 6)), jnp.int32)
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+
+    def dot(i, j):
+        qi = apply_rope(q, jnp.asarray([[i]]), 10_000.0)
+        kj = apply_rope(k, jnp.asarray([[j]]), 10_000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert dot(5, 3) == pytest.approx(dot(105, 103), rel=1e-4)
+    assert dot(0, 0) == pytest.approx(dot(77, 77), rel=1e-4)
+
+
+def test_rope_position_zero_identity():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 1, 2, 16)), jnp.float32)
+    y = apply_rope(x, jnp.zeros((1, 1), jnp.int32), 10_000.0)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_rms_norm_unit_rms(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 3, 64)) * 7.0, jnp.float32)
+    y = np.asarray(rms_norm(x, jnp.zeros(64), 1e-6))
+    rms = np.sqrt((y ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layer_norm_standardizes():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, 32)) * 3 + 5, jnp.float32)
+    y = np.asarray(layer_norm(x, jnp.ones(32), jnp.zeros(32)))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, rtol=1e-2)
+
+
+def test_rope_freqs_monotone():
+    f = np.asarray(rope_freqs(64, 10_000.0))
+    assert (np.diff(f) < 0).all() and f[0] == 1.0
+
+
+# -------- wkv6 chunked invariance to chunk size (system property) ----------
+
+@given(st.sampled_from([8, 16, 32, 64]))
+@settings(max_examples=4, deadline=None)
+def test_wkv6_chunk_size_invariance(chunk):
+    from repro.models.rwkv import wkv6_chunked_jnp
+    rng = np.random.default_rng(3)
+    bh, t, n = 2, 64, 8
+    r = jnp.asarray(rng.standard_normal((bh, t, n)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, t, n)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, t, n)), jnp.float32)
+    w = jnp.asarray(0.8 + 0.19 * rng.random((bh, t, n)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((bh, n)) * 0.2, jnp.float32)
+    o1, s1 = wkv6_chunked_jnp(r, k, v, w, u, chunk=chunk)
+    o2, s2 = wkv6_chunked_jnp(r, k, v, w, u, chunk=t)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_scan_additivity_in_state():
+    """Splitting a sequence and chaining states == full sequence."""
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.models.mamba import init_mamba, mamba_apply
+    cfg = dataclasses.replace(get_arch("jamba-v0.1-52b").reduced(),
+                              dtype="float32")
+    p = init_mamba(jax.random.key(0), cfg, jnp.float32)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((1, 12, cfg.d_model)), jnp.float32)
+    full, state_full = mamba_apply(p, x, cfg=cfg)
+    import jax.numpy as jnp2
+    zero_state = {"conv": jnp2.zeros((1, cfg.mamba_d_conv - 1,
+                                      cfg.mamba_expand * cfg.d_model),
+                                     jnp.float32),
+                  "ssm": jnp2.zeros((1, cfg.mamba_expand * cfg.d_model,
+                                     cfg.mamba_d_state), jnp.float32)}
+    o1, s1 = mamba_apply(p, x[:, :6], cfg=cfg, state=zero_state)
+    o2, s2 = mamba_apply(p, x[:, 6:], cfg=cfg, state=s1)
+    np.testing.assert_allclose(np.concatenate([o1, o2], 1),
+                               np.asarray(full), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,199 @@
+"""Model substrate unit tests: layer program, cache consistency
+(decode == prefill), MoE mode equivalence, chunked loss."""
+import dataclasses
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig
+from repro.models import (init_params, init_cache, ModelCtx, make_prefill,
+                          make_decode_step, build_program, layer_sigs)
+from repro.models.lm import chunked_xent, loss_fn
+from repro.models.ffn import (init_moe, moe_dense_apply, moe_sharded_apply,
+                              padded_experts)
+from repro.data import synthetic_batch
+
+
+# --------------------------------------------------------- programs --------
+
+def test_program_deepseek_first_dense():
+    cfg = get_arch("deepseek-v3-671b")
+    prog = build_program(cfg)
+    total = sum(r * len(u) for r, u in prog)
+    assert total == 61
+    assert prog[0] == (3, (("mla", "glu"),))
+    assert prog[1] == (58, (("mla", "moe"),))
+
+
+def test_program_gemma_pattern_and_tail():
+    cfg = get_arch("gemma3-4b")
+    prog = build_program(cfg)
+    total = sum(r * len(u) for r, u in prog)
+    assert total == 34
+    reps, unit = prog[0]
+    assert reps == 5 and len(unit) == 6
+    assert [k for k, _ in unit] == ["swa"] * 5 + ["attn"]
+    # 4-layer tail unrolled
+    assert sum(r * len(u) for r, u in prog[1:]) == 4
+
+
+def test_program_jamba_interleave():
+    cfg = get_arch("jamba-v0.1-52b")
+    prog = build_program(cfg)
+    assert len(prog) == 1
+    reps, unit = prog[0]
+    assert reps == 4 and len(unit) == 8
+    kinds = [k for k, _ in unit]
+    assert kinds == ["mamba"] * 4 + ["attn"] + ["mamba"] * 3
+    ffns = [f for _, f in unit]
+    assert ffns == ["glu", "moe"] * 4          # MoE every other layer
+
+
+def test_sigs_cover_all_layers():
+    for name in ("rwkv6-7b", "llama3-405b", "hubert-xlarge"):
+        cfg = get_arch(name)
+        assert len(layer_sigs(cfg)) == cfg.n_layers
+
+
+# ----------------------------------------- decode == prefill ---------------
+
+@pytest.mark.parametrize("name", [
+    "llama3-405b",       # GQA causal
+    "gemma3-4b",         # SWA + global mix
+    "deepseek-v3-671b",  # MLA (+MoE)
+    "rwkv6-7b",          # RWKV recurrence
+    "jamba-v0.1-52b",    # mamba + attn hybrid (+MoE)
+])
+def test_decode_matches_prefill(name):
+    """Token-by-token decode with cache must reproduce the prefill logits of
+    the final position (same params, same tokens)."""
+    cfg = get_arch(name).reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    t = 12
+    params = init_params(jax.random.key(3), cfg)
+    ctx = ModelCtx(remat=False, wkv_chunk=4)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, t)), jnp.int32)
+
+    batch = {"tokens": toks}
+    if cfg.vlm_patches:
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((1, cfg.vlm_patches, cfg.frontend_dim)),
+            jnp.float32)
+    want, _ = jax.jit(make_prefill(cfg, ctx))(params, batch)
+
+    dec = jax.jit(make_decode_step(cfg, ctx))
+    caches = init_cache(cfg, 1, t)
+    # VLM decode path embeds tokens only; restrict test to pure-token archs
+    logits = None
+    for i in range(t):
+        logits, _, caches = dec(params, caches, toks[:, i:i + 1],
+                                jnp.asarray([i], jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_swa_rolling_cache_matches_full():
+    """Decode past the window: ring-buffer cache must equal a full cache with
+    window masking."""
+    cfg = get_arch("gemma3-4b").reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32", sliding_window=8)
+    t = 20
+    params = init_params(jax.random.key(4), cfg)
+    ctx = ModelCtx(remat=False)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, t)), jnp.int32)
+    want, _ = jax.jit(make_prefill(cfg, ctx))(params, {"tokens": toks})
+    dec = jax.jit(make_decode_step(cfg, ctx))
+    caches = init_cache(cfg, 1, t)    # swa layers allocate only window slots
+    logits = None
+    for i in range(t):
+        logits, _, caches = dec(params, caches, toks[:, i:i + 1],
+                                jnp.asarray([i], jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------- MoE -----------
+
+def _moe_cfg():
+    return dataclasses.replace(
+        get_arch("qwen2-moe-a2.7b").reduced(), dtype="float32")
+
+
+def test_moe_padded_experts():
+    assert padded_experts(60) == 64
+    assert padded_experts(256) == 256
+    assert padded_experts(16) == 16
+
+
+@pytest.mark.parametrize("mode", ["allreduce", "alltoall"])
+def test_moe_sharded_matches_dense(mode):
+    """With generous capacity (no token drops), the expert-parallel paths
+    must agree with the compute-all-experts oracle."""
+    cfg = _moe_cfg()
+    params = init_moe(jax.random.key(5), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (2, 8, cfg.d_model)), jnp.float32)
+    want, aux_want = moe_dense_apply(params, x, cfg=cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    got, aux = moe_sharded_apply(params, x, cfg=cfg, mesh=mesh, mode=mode,
+                                 capacity_factor=64.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(aux), float(aux_want), rtol=1e-4)
+
+
+def test_moe_aux_loss_positive():
+    cfg = _moe_cfg()
+    params = init_moe(jax.random.key(6), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (1, 16, cfg.d_model)), jnp.float32)
+    _, aux = moe_dense_apply(params, x, cfg=cfg)
+    assert float(aux) >= 1.0 - 1e-3   # E·Σ f·p ≥ 1 by Cauchy-Schwarz
+
+
+# ----------------------------------------------------------- loss ----------
+
+def test_chunked_xent_matches_dense():
+    rng = np.random.default_rng(4)
+    b, t, d, v = 2, 16, 8, 32
+    h = jnp.asarray(rng.standard_normal((b, t, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+    got = chunked_xent(h, w, labels, chunk=4)
+    logits = np.einsum("btd,vd->btv", h, w)
+    lse = jax.nn.logsumexp(jnp.asarray(logits), axis=-1)
+    gold = np.take_along_axis(logits, np.asarray(labels)[..., None],
+                              axis=-1)[..., 0]
+    want = float(jnp.mean(lse - jnp.asarray(gold)))
+    assert float(got) == pytest.approx(want, rel=1e-5)
+
+
+def test_loss_mask_vlm():
+    cfg = dataclasses.replace(get_arch("llava-next-34b").reduced(),
+                              dtype="float32")
+    params = init_params(jax.random.key(7), cfg)
+    ctx = ModelCtx(remat=False)
+    batch = synthetic_batch(cfg, 64, 2, "train")
+    loss, metrics = loss_fn(params, cfg, batch, ctx)
+    assert np.isfinite(float(loss))
+
+
+def test_deepseek_mtp_head():
+    """Optional MTP auxiliary objective (DeepSeek-V3) trains and adds loss."""
+    cfg = dataclasses.replace(get_arch("deepseek-v3-671b").reduced(),
+                              dtype="float32", mtp_weight=0.3)
+    params = init_params(jax.random.key(0), cfg)
+    assert "mtp_proj" in params
+    ctx = ModelCtx(remat=False)
+    batch = synthetic_batch(cfg, 32, 2, "train")
+    loss, metrics = loss_fn(params, cfg, batch, ctx)
+    assert "mtp" in metrics and np.isfinite(float(metrics["mtp"]))
+    cfg0 = dataclasses.replace(cfg, mtp_weight=0.0)
+    params0 = init_params(jax.random.key(0), cfg0)
+    loss0, _ = loss_fn(params0, cfg0, batch, ctx)
+    assert float(loss) != float(loss0)

@@ -1,0 +1,81 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PolicyConfig, init_policy, policy_scores, init_state,
+                        random_graph_batch)
+from repro.core.s2v import embed_full, init_s2v
+from repro.core.qmodel import scores_local, init_q, NEG_INF
+from repro.core.policy import num_params
+
+
+def _setup(n=16, b=2, k=8, seed=0):
+    adj = random_graph_batch("er", n, b, seed=seed, rho=0.3)
+    params = init_policy(jax.random.key(seed), PolicyConfig(embed_dim=k))
+    state = init_state(jnp.asarray(adj))
+    return adj, params, state
+
+
+def test_embedding_shape_dtype():
+    adj, params, state = _setup()
+    e = embed_full(params.em, state.adj, state.solution, num_layers=2)
+    assert e.shape == (2, 8, 16)
+    assert np.isfinite(np.asarray(e)).all()
+
+
+def test_embedding_nonnegative():
+    # final relu ⇒ embeddings ≥ 0
+    adj, params, state = _setup(seed=3)
+    e = embed_full(params.em, state.adj, state.solution, num_layers=2)
+    assert (np.asarray(e) >= 0).all()
+
+
+def test_scores_masked():
+    adj, params, state = _setup()
+    s = policy_scores(params, state.adj, state.solution, state.candidate,
+                      num_layers=2)
+    cand = np.asarray(state.candidate)
+    sn = np.asarray(s)
+    assert (sn[cand < 0.5] <= NEG_INF / 2).all()
+    assert np.isfinite(sn[cand > 0.5]).all()
+
+
+def test_scores_permutation_equivariance():
+    """Relabeling nodes permutes scores identically — a structural property
+    of message-passing embeddings."""
+    adj, params, state = _setup(n=12, b=1, seed=5)
+    s = np.asarray(policy_scores(params, state.adj, state.solution,
+                                 state.candidate, num_layers=2))[0]
+    perm = np.random.default_rng(0).permutation(12)
+    adj_p = adj[0][np.ix_(perm, perm)][None]
+    stp = init_state(jnp.asarray(adj_p))
+    sp = np.asarray(policy_scores(params, stp.adj, stp.solution,
+                                  stp.candidate, num_layers=2))[0]
+    np.testing.assert_allclose(s[perm], sp, rtol=1e-4, atol=1e-5)
+
+
+def test_num_params_formula():
+    # 4K^2 + 4K is the gradient all-reduce payload (§5.1(3))
+    cfg = PolicyConfig(embed_dim=32)
+    p = init_policy(jax.random.key(0), cfg)
+    total = sum(x.size for x in jax.tree.leaves(p))
+    assert total == num_params(cfg) == 4 * 32 * 32 + 4 * 32
+
+
+@given(st.integers(1, 4))
+@settings(max_examples=4, deadline=None)
+def test_more_layers_changes_scores(l):
+    adj, params, state = _setup(seed=9)
+    s1 = policy_scores(params, state.adj, state.solution, state.candidate,
+                       num_layers=l)
+    assert np.isfinite(np.asarray(s1)[np.asarray(state.candidate) > 0.5]).all()
+
+
+def test_solution_affects_embedding():
+    adj, params, state = _setup(seed=11)
+    e0 = embed_full(params.em, state.adj, state.solution, num_layers=2)
+    sol = state.solution.at[:, 0].set(1.0)
+    e1 = embed_full(params.em, state.adj, sol, num_layers=2)
+    assert float(jnp.abs(e0 - e1).max()) > 0

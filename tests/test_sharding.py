@@ -1,0 +1,120 @@
+"""Sharding rules: param specs cover every arch, no invalid specs, layouts
+differ as intended.  Uses abstract meshes (no devices needed)."""
+import math
+
+import numpy as np
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.configs.base import SHAPES
+from repro.models import init_params
+from repro.sharding import param_specs, activation_rules, batch_specs
+from repro.data.pipeline import batch_spec
+
+
+class FakeMesh:
+    """Shape-only stand-in (param_specs only reads .shape/.axis_names)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = math.prod(shape.values())
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _shards(spec, mesh):
+    n = 1
+    for ax in spec:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            n *= mesh.shape[a]
+    return n
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("layout", ["tp", "fsdp"])
+def test_specs_valid_for_all_archs(name, layout):
+    cfg = get_arch(name)
+    ps = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    specs = param_specs(ps, MESH, zero3=True, layout=layout)
+    flat_p = jax.tree.leaves(ps)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= leaf.ndim
+        # every sharded dim must divide
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            k = math.prod(MESH.shape[a]
+                          for a in (ax if isinstance(ax, tuple) else (ax,)))
+            assert leaf.shape[dim] % k == 0, (name, leaf.shape, spec)
+        # no duplicate axes
+        used = [a for ax in spec if ax is not None
+                for a in (ax if isinstance(ax, tuple) else (ax,))]
+        assert len(used) == len(set(used))
+
+
+@pytest.mark.parametrize("name,budget_gib", [("llama3-405b", 4.0),
+                                             ("deepseek-v3-671b", 6.0)])
+def test_big_models_fit_param_budget(name, budget_gib):
+    """With ZeRO-3, total bf16 param bytes per device stay within budget
+    (≈ total/256 plus replication slack)."""
+    cfg = get_arch(name)
+    ps = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    specs = param_specs(ps, MESH, zero3=True)
+    per_dev = sum(
+        l.size * l.dtype.itemsize / _shards(s, MESH)
+        for l, s in zip(jax.tree.leaves(ps),
+                        jax.tree.leaves(specs,
+                                        is_leaf=lambda x: isinstance(x, P))))
+    assert per_dev < budget_gib * 2 ** 30, per_dev / 2 ** 30
+
+
+def test_fsdp_layout_more_sharded_than_tp():
+    cfg = get_arch("rwkv6-7b")
+    ps = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    tp = param_specs(ps, MESH, layout="tp")
+    fs = param_specs(ps, MESH, layout="fsdp")
+
+    def per_dev(specs):
+        return sum(l.size * l.dtype.itemsize / _shards(s, MESH)
+                   for l, s in zip(jax.tree.leaves(ps),
+                                   jax.tree.leaves(specs,
+                                                   is_leaf=lambda x:
+                                                   isinstance(x, P))))
+    assert per_dev(fs) < per_dev(tp) * 0.25
+
+
+def test_activation_rules_modes():
+    tr = activation_rules(MESH, SHAPES["train_4k"])
+    assert tr["act_resid"] == P("data", None, None)
+    dec = activation_rules(MESH, SHAPES["decode_32k"])
+    assert "cache_kv" in dec
+    long = activation_rules(MESH, SHAPES["long_500k"])
+    # batch=1: cache sharded over data+model on the sequence dim
+    assert long["cache_kv"][1] == ("data", "model")
+    sp = activation_rules(MESH, SHAPES["train_4k"], layout="sp")
+    assert sp["act_resid"] == P("data", "model", None)
+
+
+def test_batch_specs_divisibility():
+    cfg = get_arch("granite-20b")
+    bt = batch_spec(cfg, 4096, 256, "train")
+    specs = batch_specs(bt, MESH, SHAPES["train_4k"])
+    assert specs["tokens"][0] == "data"
+    bt1 = batch_spec(cfg, 524288, 1, "decode")
+    specs1 = batch_specs(bt1, MESH, SHAPES["long_500k"])
+    assert specs1["token"] == P(None, None)  # batch 1 unshardable
+
+
+def test_multipod_batch_over_pod_and_data():
+    cfg = get_arch("granite-20b")
+    bt = batch_spec(cfg, 4096, 256, "train")
+    specs = batch_specs(bt, MESH_MP, SHAPES["train_4k"])
+    assert specs["tokens"][0] == ("pod", "data")

@@ -1,0 +1,87 @@
+"""Spatial-parallelism equivalence: P-way shard_map == single device.
+
+Run in a subprocess with XLA_FLAGS host-device-count (conftest keeps the main
+test process at 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.analysis import (efficiency_embed, efficiency_action,
+                                 efficiency_embed_closed,
+                                 efficiency_action_closed,
+                                 memory_per_device, collective_bytes_per_step,
+                                 t_embed, t_embed_seq)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(p)d"
+    import json, numpy as np, jax, jax.numpy as jnp
+    from repro.core import (PolicyConfig, init_policy, init_state,
+                            policy_scores, random_graph_batch,
+                            make_graph_mesh, spatial_scores_fn,
+                            shard_graph_arrays)
+    adj = random_graph_batch("er", %(n)d, 3, seed=42, rho=0.25)
+    params = init_policy(jax.random.key(7), PolicyConfig(embed_dim=16))
+    s = init_state(jnp.asarray(adj))
+    ref = policy_scores(params, s.adj, s.solution, s.candidate, num_layers=2)
+    mesh = make_graph_mesh(%(p)d)
+    scorer = spatial_scores_fn(mesh, num_layers=2)
+    a, so, c = shard_graph_arrays(mesh, s.adj, s.solution, s.candidate)
+    out = scorer(params, a, so, c)
+    print(json.dumps({"maxdiff": float(jnp.abs(ref - out).max())}))
+""")
+
+
+@pytest.mark.parametrize("p,n", [(2, 16), (4, 32), (8, 32)])
+def test_partitioned_scores_match_single_device(p, n):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", _CHILD % {"p": p, "n": n}],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    maxdiff = json.loads(out.stdout.strip().splitlines()[-1])["maxdiff"]
+    assert maxdiff < 1e-4
+
+
+# ----- analytic models (§5) — pure functions, no devices needed -----
+
+def test_parallel_efficiency_near_one_paper_regime():
+    """Paper claim: E ≈ 1.0 when P ≪ N (§5.1)."""
+    for p in (2, 4, 6):
+        # time-based model with realistic V100/NVLink constants stays high
+        e = efficiency_embed(b=1, n=21000, rho=0.15, k=32, l=2, p=p)
+        assert e > 0.8, (p, e)
+        ea = efficiency_action_closed(n=21000, k=32, p=p)
+        assert ea > 0.99, (p, ea)
+        assert efficiency_embed_closed(n=21000, p=p) > 0.99
+
+
+def test_efficiency_degrades_when_p_approaches_n():
+    hi = efficiency_embed(b=1, n=256, rho=0.15, k=32, l=2, p=2)
+    lo = efficiency_embed(b=1, n=256, rho=0.15, k=32, l=2, p=128)
+    assert lo < hi
+
+
+def test_memory_model_scales_inverse_p():
+    m1 = memory_per_device(b=1, n=21000, rho=0.15, p=1)
+    m6 = memory_per_device(b=1, n=21000, rho=0.15, p=6)
+    assert m6["adjacency_bytes"] == pytest.approx(m1["adjacency_bytes"] / 6)
+
+
+def test_collective_bytes_formula():
+    c = collective_bytes_per_step(b=2, n=100, k=32, l=2, p=4)
+    assert c["embed_allreduce_bytes"] == 2 * 2 * 32 * 100 * 4
+    assert c["action_allreduce_bytes"] == 2 * 32 * 4
+    assert c["grad_allreduce_bytes"] == (4 * 32 * 32 + 4 * 32) * 4
+
+
+def test_t_embed_parallel_faster():
+    assert t_embed(1, 21000, 0.15, 32, 2, 6) < t_embed_seq(1, 21000, 0.15, 32, 2)
