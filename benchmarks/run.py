@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
   Fig 6  learning_speed       Fig 7  multinode_selection
   Fig 8  gd_iterations        Fig 9/10/11  scaling
   §5     efficiency_model     kernels  kernel_bench
+  §5.2   sparse_vs_dense (GraphRep backend memory/latency)
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ def main() -> None:
 
     from . import (learning_speed, multinode_selection, gd_iterations,
                    scaling, efficiency_model, kernel_bench,
-                   roofline_summary)
+                   roofline_summary, sparse_vs_dense)
     modules = {
         "learning_speed": learning_speed,
         "multinode_selection": multinode_selection,
@@ -32,6 +33,7 @@ def main() -> None:
         "efficiency_model": efficiency_model,
         "kernel_bench": kernel_bench,
         "roofline_summary": roofline_summary,
+        "sparse_vs_dense": sparse_vs_dense,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,0 +1,62 @@
+"""GraphRep backend benchmark: dense (B, N, N) vs sparse (B, N, D) padded
+edge lists at paper scale (§5.2 memory model, §4.1 distributed storage).
+
+Records, per representation at N ≥ 2048 (ER ρ=0.15):
+- peak per-step state bytes (adjacency/topology + C/S masks),
+- per-policy-evaluation wall time of the unified Alg. 4 step.
+
+The paper's sparse-storage claim is a MEMORY claim — O(N²ρ) COO (their
+GPUs) or O(N·maxdeg) padded lists (here) against O(N²) dense — that is what
+unlocks the >30M-edge graphs of §6.4; wall time per eval is reported so the
+compute cost of gather-vs-matmul is visible too.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import save, timed
+
+
+def run(quick: bool = False):
+    import jax
+    from repro.core import (PolicyConfig, init_policy, get_rep,
+                            random_graph_batch)
+    from repro.core.inference import _inference_step
+
+    n = 2048                       # acceptance floor: N >= 2048
+    k = 8 if quick else 16
+    evals = 1 if quick else 3
+    adj = random_graph_batch("er", n, 1, seed=0, rho=0.15)
+    params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=k))
+
+    results = {"n": n, "rho": 0.15, "embed_dim": k}
+    rows = []
+    for name in ("dense", "sparse"):
+        rep = get_rep(name)
+        state = rep.init_state(adj)
+        sb = rep.state_bytes(state)
+
+        def one_eval(s):
+            s2, done, nc = _inference_step(params, s, rep=rep, num_layers=2,
+                                           use_adaptive=True)
+            jax.block_until_ready(s2.solution)
+            return s2
+
+        state = one_eval(state)                 # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(evals):
+            state = one_eval(state)
+        dt = (time.perf_counter() - t0) / evals
+
+        results[name] = {"state_bytes": int(sb), "s_per_eval": dt}
+        rows.append((f"sparse_vs_dense_{name}_n{n}", dt * 1e6,
+                     f"state {sb/1e6:.2f}MB per-eval {dt*1e3:.1f}ms"))
+
+    ratio = results["dense"]["state_bytes"] / results["sparse"]["state_bytes"]
+    results["dense_over_sparse_bytes"] = ratio
+    rows.append((f"sparse_vs_dense_ratio_n{n}", 0.0,
+                 f"dense/sparse state bytes = {ratio:.2f}x"))
+    save("sparse_vs_dense", results)
+    return rows

@@ -36,8 +36,18 @@ def main():
                 multi_node=True)
     assert np.asarray(is_cover(jnp.asarray(test),
                                jnp.asarray(res.solution))).all()
+    # same solve on the sparse GraphRep backend (O(N·maxdeg) state, paper
+    # §5.2).  Solutions match whenever no two candidates tie in Q-score;
+    # float summation order differs between the reps, so near-ties may
+    # rank differently — both results are always valid covers.
+    res_sparse = solve(agent.params, test, num_layers=cfg.num_layers,
+                       multi_node=True, rep="sparse")
+    assert np.asarray(is_cover(jnp.asarray(test),
+                               jnp.asarray(res_sparse.solution))).all()
+    parity = ("identical" if np.array_equal(res_sparse.solution, res.solution)
+              else "equivalent cover")
     greedy = np.array([greedy_mvc(a).sum() for a in test])
-    print(f"RL sizes     : {res.sizes.tolist()}")
+    print(f"RL sizes     : {res.sizes.tolist()}  (sparse rep: {parity})")
     print(f"greedy sizes : {greedy.tolist()}")
     print(f"exact optima : {refs.tolist()}")
     print(f"policy evals : {res.policy_evals} (adaptive top-d, vs ≤{n} for d=1)")

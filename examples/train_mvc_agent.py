@@ -29,6 +29,9 @@ def main():
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--embed-dim", type=int, default=32)
+    ap.add_argument("--rep", choices=["dense", "sparse"], default="dense",
+                    help="GraphRep backend (DESIGN.md §1): sparse stores "
+                         "O(N·maxdeg) padded edge lists instead of O(N²)")
     args = ap.parse_args()
 
     kw = {"er": {"rho": 0.15}, "ba": {"d": 4}, "social": {}}[args.kind]
@@ -39,13 +42,13 @@ def main():
 
     cfg = PolicyConfig(embed_dim=args.embed_dim, num_layers=2, minibatch=64,
                        replay_capacity=10_000, learning_rate=args.lr,
-                       eps_decay_steps=args.steps // 2)
+                       eps_decay_steps=args.steps // 2, graph_rep=args.rep)
     agent = Agent(cfg, num_nodes=args.nodes)
 
     curve = []
 
     def ev(ag):
-        r = evaluate_quality(ag, test, refs)
+        r = evaluate_quality(ag, test, refs)    # rep follows cfg.graph_rep
         curve.append((ag.step_count, r))
         print(f"  step {ag.step_count:5d}  approx-ratio {r:.3f}")
         return r
@@ -59,7 +62,7 @@ def main():
           f"{log.losses[-1]:.4f}")
 
     res = solve(agent.params, test, num_layers=cfg.num_layers,
-                multi_node=True)
+                multi_node=True, rep=args.rep)
     greedy = np.array([greedy_mvc(a).sum() for a in test])
     twoapp = np.array([matching_2approx(a).sum() for a in test])
     print(f"RL (adaptive) mean |MVC| : {res.sizes.mean():.2f}")

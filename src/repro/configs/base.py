@@ -136,6 +136,33 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class GraphRepConfig:
+    """Graph-representation backend selection for the paper's RL workload
+    (DESIGN.md §1).  ``rep`` picks the GraphRep the env/inference/training/
+    spatial layers dispatch through — a config flag, not a code-path fork.
+    """
+    rep: str = "dense"               # "dense" (B,N,N) | "sparse" (B,N,D)
+    max_degree: int = 0              # sparse: 0 → derive from the graph batch
+    spatial: int = 0                 # P-way node sharding, 0 → single device
+
+    def __post_init__(self):
+        assert self.rep in ("dense", "sparse"), self.rep
+
+    def make(self):
+        """Construct the GraphRep backend this config describes."""
+        from ..core.graphrep import DENSE, SparseRep
+        if self.rep == "dense":
+            return DENSE
+        return SparseRep(max_degree=self.max_degree or None)
+
+
+GRAPH_REPS = {
+    "dense": GraphRepConfig(rep="dense"),
+    "sparse": GraphRepConfig(rep="sparse"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     name: str
     seq_len: int

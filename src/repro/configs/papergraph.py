@@ -1,7 +1,19 @@
 """The paper's own workload: structure2vec policy (K=32, L=2) over MVC
-graphs — hyper-parameters of OpenGraphGym-MG §6.1."""
+graphs — hyper-parameters of OpenGraphGym-MG §6.1.
+
+``CONFIG`` is the dense baseline; ``CONFIG_SPARSE`` flips the GraphRep
+backend to distributed sparse storage (paper §4.1/§5.2, DESIGN.md §1) —
+same policy, same hyper-parameters, O(N·maxdeg) graph state.
+"""
+import dataclasses
+
 from ..core.policy import PolicyConfig
+from .base import GRAPH_REPS
 
 CONFIG = PolicyConfig(embed_dim=32, num_layers=2, gamma=0.9,
                       learning_rate=1e-5, replay_capacity=50_000,
-                      eps_start=0.9, eps_end=0.1)
+                      eps_start=0.9, eps_end=0.1, graph_rep="dense")
+
+CONFIG_SPARSE = dataclasses.replace(CONFIG, graph_rep="sparse")
+
+GRAPH_REP = GRAPH_REPS[CONFIG.graph_rep]

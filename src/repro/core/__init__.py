@@ -3,16 +3,27 @@
 Spatially-partitioned graph RL — structure2vec embedding (Alg. 2), action
 evaluation (Alg. 3), parallel inference (Alg. 4), parallel training (Alg. 5),
 compressed replay (§4.4), adaptive multi-node selection + τ GD iterations
-(§4.5), analytic models (§5).
+(§4.5), analytic models (§5).  Graph storage is pluggable (DESIGN.md §1):
+every layer dispatches through a GraphRep backend — dense (B, N, N)
+adjacency or distributed sparse (B, N, D) padded neighbor lists.
 """
-from .graphs import (GraphState, init_state, residual_adjacency, erdos_renyi,
-                     barabasi_albert, social_like, random_graph_batch)
+from .graphs import (GraphState, SparseGraphState, SparseGraphBatch,
+                     init_state, sparse_init_state, residual_adjacency,
+                     residual_edge_mask, sparse_batch_from_dense,
+                     erdos_renyi, barabasi_albert, social_like,
+                     random_graph_batch)
+from .graphrep import (GraphRep, DenseRep, SparseRep, DENSE, SPARSE,
+                       get_rep, rep_names, rep_for_state)
 from .policy import PolicyConfig, PolicyParams, init_policy, policy_scores
 from .s2v import S2VParams, init_s2v, embed_local, embed_full
+from .s2v_sparse import (embed_sparse, embed_sparse_local,
+                         sparse_policy_scores, sparse_state_bytes)
 from .qmodel import QParams, init_q, scores_local
 from .agent import Agent, candidate_mask
 from .replay import ReplayBuffer, tuples_to_graphs
 from .inference import solve, adaptive_d, InferenceResult
 from .training import train_agent, evaluate_quality, TrainLog
-from .spatial import make_graph_mesh, spatial_scores_fn, shard_graph_arrays
+from .spatial import (make_graph_mesh, spatial_scores_fn,
+                      sparse_spatial_scores_fn, shard_graph_arrays,
+                      shard_sparse_arrays)
 from . import env, solvers, analysis

@@ -5,18 +5,25 @@ Training follows Alg. 5: targets are computed at experience-insertion time
 (``target = reward + γ·max_v Q(s', v)``, line 12), tuples are stored
 compressed, and each env step runs τ gradient-descent iterations (§4.5.2)
 over minibatches re-materialized by Tuples2Graphs.
+
+The agent is representation-polymorphic (DESIGN.md §1): acting, target
+bootstrapping and minibatch training dispatch through the GraphRep backend
+matching the state/dataset layout, so the same replay buffer of compressed
+``(graph id, S, action, target)`` tuples drives both the dense and the
+sparse path.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .graphs import GraphState
+from .graphs import GraphState, SparseGraphBatch
+from .graphrep import DENSE, SPARSE, GraphRep, get_rep, rep_for_state
 from .policy import PolicyConfig, PolicyParams, init_policy, policy_scores
 from .qmodel import NEG_INF
 from .replay import ReplayBuffer, tuples_to_graphs
@@ -28,9 +35,25 @@ def candidate_mask(adj: jax.Array, solution: jax.Array) -> jax.Array:
     return ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
 
 
+@functools.partial(jax.jit, static_argnames=("rep", "num_layers"))
+def greedy_action_state(params: PolicyParams, state, *, rep: GraphRep,
+                        num_layers: int):
+    """argmax_v Q(s, v) over candidates (exploit path of Alg. 1 line 10)."""
+    s = rep.scores(params, state, num_layers=num_layers)
+    return jnp.argmax(s, axis=-1), s
+
+
+@functools.partial(jax.jit, static_argnames=("rep", "num_layers"))
+def max_q_state(params: PolicyParams, state, *, rep: GraphRep,
+                num_layers: int):
+    s = rep.scores(params, state, num_layers=num_layers)
+    has_cand = state.candidate.sum(-1) > 0
+    return jnp.where(has_cand, s.max(-1), 0.0)
+
+
 @functools.partial(jax.jit, static_argnames=("num_layers",))
 def greedy_action(params: PolicyParams, adj, sol, cand, *, num_layers: int):
-    """argmax_v Q(s, v) over candidates (exploit path of Alg. 1 line 10)."""
+    """Dense-array convenience wrapper (kept for existing callers)."""
     s = policy_scores(params, adj, sol, cand, num_layers=num_layers)
     return jnp.argmax(s, axis=-1), s
 
@@ -42,12 +65,13 @@ def max_q(params: PolicyParams, adj, sol, cand, *, num_layers: int):
     return jnp.where(has_cand, s.max(-1), 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("num_layers",), donate_argnums=(0, 1))
-def _train_minibatch(params: PolicyParams, opt: AdamState, adj, sol, cand,
-                     action, target, *, num_layers: int, lr: float):
+@functools.partial(jax.jit, static_argnames=("rep", "num_layers"),
+                   donate_argnums=(0, 1))
+def _train_minibatch(params: PolicyParams, opt: AdamState, state,
+                     action, target, *, rep: GraphRep, num_layers: int,
+                     lr: float):
     def loss_fn(p):
-        s = policy_scores(p, adj, sol, cand, num_layers=num_layers,
-                          masked=False)
+        s = rep.scores(p, state, num_layers=num_layers, masked=False)
         qsa = jnp.take_along_axis(s, action[:, None], axis=-1)[:, 0]
         return jnp.mean(jnp.square(qsa - target))
 
@@ -83,11 +107,13 @@ class Agent:
         frac = min(1.0, self.step_count / max(1, c.eps_decay_steps))
         return c.eps_start + (c.eps_end - c.eps_start) * frac
 
-    def act(self, state: GraphState, explore: bool = True) -> np.ndarray:
-        """Batched epsilon-greedy action (Alg. 1 lines 9-10)."""
+    def act(self, state, explore: bool = True) -> np.ndarray:
+        """Batched epsilon-greedy action (Alg. 1 lines 9-10); works on both
+        representations via state-type dispatch."""
         b, n = state.candidate.shape
-        greedy, _ = greedy_action(self.params, state.adj, state.solution,
-                                  state.candidate, num_layers=self.cfg.num_layers)
+        greedy, _ = greedy_action_state(self.params, state,
+                                        rep=rep_for_state(state),
+                                        num_layers=self.cfg.num_layers)
         greedy = np.asarray(greedy)
         if not explore:
             return greedy
@@ -102,8 +128,8 @@ class Agent:
         return out
 
     # -- remembering ---------------------------------------------------------
-    def remember(self, graph_idx, prev_state: GraphState, action,
-                 reward, next_state: GraphState, done) -> None:
+    def remember(self, graph_idx, prev_state, action,
+                 reward, next_state, done) -> None:
         """Store compressed tuples.
 
         ``target_mode="stored"`` computes the TD target now (paper Alg. 5
@@ -113,8 +139,9 @@ class Agent:
         rates (EXPERIMENTS.md §Paper-claims notes the deviation).
         """
         if self.target_mode == "stored":
-            nxt = max_q(self.params, next_state.adj, next_state.solution,
-                        next_state.candidate, num_layers=self.cfg.num_layers)
+            nxt = max_q_state(self.params, next_state,
+                              rep=rep_for_state(next_state),
+                              num_layers=self.cfg.num_layers)
             target = np.asarray(reward) + self.cfg.gamma * np.asarray(nxt) * (
                 1.0 - np.asarray(done, np.float32))
         else:
@@ -125,9 +152,17 @@ class Agent:
                                done=np.asarray(done))
 
     # -- training -----------------------------------------------------------
-    def train(self, adj_stack: jnp.ndarray, tau: Optional[int] = None
-              ) -> float:
-        """τ gradient-descent iterations on sampled minibatches (§4.5.2)."""
+    def train(self, source, tau: Optional[int] = None,
+              residual: bool = True) -> float:
+        """τ gradient-descent iterations on sampled minibatches (§4.5.2).
+
+        ``source`` is the training-graph dataset in either representation:
+        a (G, N, N) dense adjacency stack, or a ``SparseGraphBatch`` of
+        (G, N, D) neighbor lists (from ``SparseRep.prepare_dataset``).
+        ``residual`` carries the env's semantics (see ``env.register``) so
+        replay states are re-materialized on the graph the policy acts on.
+        """
+        rep = SPARSE if isinstance(source, SparseGraphBatch) else DENSE
         tau = self.cfg.grad_iters if tau is None else tau
         if self.replay.size < self.cfg.minibatch:
             return float("nan")
@@ -136,19 +171,17 @@ class Agent:
             gi, sol, act, tgt, rew, sol2, done = self.replay.sample(
                 self.cfg.minibatch, self._rng)
             if self.target_mode == "fresh":
-                adj2 = tuples_to_graphs(adj_stack, gi, sol2)
-                sol2_j = jnp.asarray(sol2)
-                cand2 = candidate_mask(adj2, sol2_j)
-                nxt = max_q(self.params, adj2, sol2_j, cand2,
-                            num_layers=self.cfg.num_layers)
+                st2 = rep.state_from_tuples(source, gi, sol2,
+                                            residual=residual)
+                nxt = max_q_state(self.params, st2, rep=rep,
+                                  num_layers=self.cfg.num_layers)
                 tgt = rew + self.cfg.gamma * np.asarray(nxt) * (1.0 - done)
-            adj = tuples_to_graphs(adj_stack, gi, sol)
-            sol_j = jnp.asarray(sol)
-            cand = candidate_mask(adj, sol_j)
+            st = rep.state_from_tuples(source, gi, sol, residual=residual)
             self.params, self.opt, l = _train_minibatch(
-                self.params, self.opt, adj, sol_j, cand,
+                self.params, self.opt, st,
                 jnp.asarray(act), jnp.asarray(tgt),
-                num_layers=self.cfg.num_layers, lr=self.cfg.learning_rate)
+                rep=rep, num_layers=self.cfg.num_layers,
+                lr=self.cfg.learning_rate)
             loss = float(l)
         self.step_count += 1
         return loss

@@ -7,7 +7,11 @@ work) to avoid host round-trips per RL step.  This is a documented hardware
 adaptation (DESIGN.md §2).
 
 Environments are registered by name so users can plug in new graph problems
-(the paper's extensibility claim).
+(the paper's extensibility claim), and every registered step is
+representation-polymorphic: it accepts either a dense ``GraphState`` or a
+``SparseGraphState`` (DESIGN.md §1) and returns a state of the same
+representation.  On the sparse path the topology is never rewritten — only
+the C/S masks update.
 """
 from __future__ import annotations
 
@@ -16,23 +20,34 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from .graphs import GraphState, init_state
+from .graphs import (GraphState, SparseGraphState, init_state,
+                     residual_edge_mask)
 
 
 EnvStep = Callable[[GraphState, jax.Array], Tuple[GraphState, jax.Array, jax.Array]]
 
 _REGISTRY: Dict[str, EnvStep] = {}
+_RESIDUAL: Dict[str, bool] = {}
 
 
-def register(name: str):
+def register(name: str, residual: bool = True):
+    """Register an environment step.  ``residual`` declares whether the
+    policy should see the residual subgraph implied by S (MVC: selecting a
+    node removes its edges) or the original topology (MaxCut: it doesn't) —
+    the GraphRep backends re-materialize replay states accordingly."""
     def deco(fn):
         _REGISTRY[name] = fn
+        _RESIDUAL[name] = residual
         return fn
     return deco
 
 
 def make(name: str) -> EnvStep:
     return _REGISTRY[name]
+
+
+def residual_semantics(name: str) -> bool:
+    return _RESIDUAL[name]
 
 
 def names():
@@ -43,15 +58,7 @@ def _onehot(v: jax.Array, n: int) -> jax.Array:
     return jax.nn.one_hot(v, n, dtype=jnp.float32)
 
 
-@register("mvc")
-def mvc_step(state: GraphState, action: jax.Array):
-    """Minimum Vertex Cover step (paper §4, Fig 3/4).
-
-    action: (B,) int32 node ids.  Adds the node to the partial solution,
-    removes it from candidates, zeroes its row+column in the residual
-    adjacency.  Reward is -1 per selected node (minimize |S|); done when no
-    edges remain.
-    """
+def _mvc_step_dense(state: GraphState, action: jax.Array):
     b, n = state.candidate.shape
     oh = _onehot(action, n)                                 # (B, N)
     solution = jnp.maximum(state.solution, oh)
@@ -65,17 +72,36 @@ def mvc_step(state: GraphState, action: jax.Array):
     return GraphState(adj=adj, candidate=candidate, solution=solution), reward, done
 
 
-@register("maxcut")
-def maxcut_step(state: GraphState, action: jax.Array):
-    """Maximum Cut step (second environment, demonstrating extensibility —
-    the paper cites MaxCut as the canonical sibling problem [24]).
+def _mvc_step_sparse(state: SparseGraphState, action: jax.Array):
+    b, n = state.candidate.shape
+    oh = _onehot(action, n)
+    solution = jnp.maximum(state.solution, oh)
+    # residual edges derive from the immutable topology + updated S
+    edge = residual_edge_mask(state.neighbors, state.valid, solution)
+    deg = edge.sum(-1)
+    candidate = ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
+    reward = -jnp.ones((b,), jnp.float32)
+    done = edge.sum((-1, -2)) == 0
+    return SparseGraphState(neighbors=state.neighbors, valid=state.valid,
+                            candidate=candidate, solution=solution), reward, done
 
-    Moving node v into set S gains (edges to V\\S) - (edges already cut to S).
-    ``adj`` stays the original adjacency (cut does not delete edges);
-    candidates are all nodes not yet in S.  done when no move has positive
-    gain — approximated here as "all nodes assigned" for fixed-horizon RL;
-    the agent's reward signal handles quality.
+
+@register("mvc")
+def mvc_step(state, action: jax.Array):
+    """Minimum Vertex Cover step (paper §4, Fig 3/4).
+
+    action: (B,) int32 node ids.  Adds the node to the partial solution,
+    removes it from candidates, and removes its incident edges from the
+    residual graph (dense: zeroes its row+column; sparse: the residual edge
+    mask drops them).  Reward is -1 per selected node (minimize |S|); done
+    when no edges remain.
     """
+    if isinstance(state, SparseGraphState):
+        return _mvc_step_sparse(state, action)
+    return _mvc_step_dense(state, action)
+
+
+def _maxcut_step_dense(state: GraphState, action: jax.Array):
     b, n = state.candidate.shape
     oh = _onehot(action, n)
     in_s = state.solution
@@ -90,11 +116,50 @@ def maxcut_step(state: GraphState, action: jax.Array):
     return GraphState(adj=state.adj, candidate=candidate, solution=solution), reward, done
 
 
+def _maxcut_step_sparse(state: SparseGraphState, action: jax.Array):
+    b, n = state.candidate.shape
+    oh = _onehot(action, n)
+    in_s = state.solution
+    # neighbor row of the chosen node: (B, D) global ids + validity
+    act = action.astype(jnp.int32)[:, None, None]
+    nbr_v = jnp.take_along_axis(state.neighbors, act, axis=1)[:, 0]
+    val_v = jnp.take_along_axis(state.valid, act, axis=1)[:, 0].astype(jnp.float32)
+    in_s_pad = jnp.pad(in_s, ((0, 0), (0, 1)))              # sentinel slot
+    s_nbr = jax.vmap(lambda sb, nb: sb[nb])(in_s_pad, nbr_v)
+    to_s = (val_v * s_nbr).sum(-1)
+    to_out = (val_v * (1.0 - s_nbr)).sum(-1)
+    reward = to_out - to_s
+    solution = jnp.maximum(in_s, oh)
+    candidate = jnp.clip(state.candidate - oh, 0.0, 1.0)
+    done = candidate.sum(-1) == 0
+    # MaxCut keeps the original topology visible to the policy (the dense
+    # env keeps ``adj`` intact) — mark the state non-residual.
+    return SparseGraphState(neighbors=state.neighbors, valid=state.valid,
+                            candidate=candidate, solution=solution,
+                            residual=False), reward, done
+
+
+@register("maxcut", residual=False)
+def maxcut_step(state, action: jax.Array):
+    """Maximum Cut step (second environment, demonstrating extensibility —
+    the paper cites MaxCut as the canonical sibling problem [24]).
+
+    Moving node v into set S gains (edges to V\\S) - (edges already cut to S).
+    The topology stays the original adjacency (cut does not delete edges);
+    candidates are all nodes not yet in S.  done when no move has positive
+    gain — approximated here as "all nodes assigned" for fixed-horizon RL;
+    the agent's reward signal handles quality.
+    """
+    if isinstance(state, SparseGraphState):
+        return _maxcut_step_sparse(state, action)
+    return _maxcut_step_dense(state, action)
+
+
 def reset(adj) -> GraphState:
     return init_state(adj)
 
 
-def solution_size(state: GraphState) -> jax.Array:
+def solution_size(state) -> jax.Array:
     return state.solution.sum(-1)
 
 
@@ -103,3 +168,9 @@ def is_cover(adj0: jax.Array, solution: jax.Array) -> jax.Array:
     keep = 1.0 - solution
     uncovered = adj0 * keep[..., :, None] * keep[..., None, :]
     return uncovered.sum((-1, -2)) == 0
+
+
+def is_cover_sparse(neighbors: jax.Array, valid: jax.Array,
+                    solution: jax.Array) -> jax.Array:
+    """Sparse-representation MVC invariant: no residual edge survives S."""
+    return residual_edge_mask(neighbors, valid, solution).sum((-1, -2)) == 0

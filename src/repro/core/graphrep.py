@@ -1,0 +1,202 @@
+"""Pluggable graph-representation backends (DESIGN.md §1).
+
+The paper's headline memory/scale win is distributed *sparse* graph storage
+(§4.1, §5.2); its baseline is the dense adjacency path.  ``GraphRep``
+abstracts "which representation" so the environment registry, the inference
+driver (Alg. 4 with adaptive multi-node selection), the training loop
+(compressed-replay re-materialization, Alg. 5 line 21) and the spatial
+shard_map path all dispatch through one interface instead of forking code
+paths:
+
+- ``DenseRep``  — (B, N, N) residual adjacency, rewritten per commit.
+- ``SparseRep`` — (B, N, D) padded neighbor lists + masks; topology is
+  immutable, residual edges derived from the solution mask.
+
+Backends are singletons (``get_rep("dense"|"sparse")``) so they can be
+passed to ``jax.jit`` as static arguments.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .graphs import (GraphState, SparseGraphBatch, SparseGraphState,
+                     init_state, residual_adjacency, residual_edge_mask,
+                     sparse_batch_from_dense, sparse_init_state)
+from .policy import PolicyParams, policy_scores
+from .s2v_sparse import sparse_policy_scores
+
+
+class GraphRep:
+    """Backend interface.  All array-returning methods are jit-traceable;
+    ``prepare_dataset``/``init_state`` run host-side (numpy in, device out).
+    """
+
+    name: str = "?"
+
+    # -- state construction -------------------------------------------------
+    def init_state(self, adj):
+        """(B, N, N) or (N, N) dense adjacency → fresh state."""
+        raise NotImplementedError
+
+    def prepare_dataset(self, adj_stack):
+        """(G, N, N) dense training set → device-resident dataset source."""
+        raise NotImplementedError
+
+    def state_from_tuples(self, source, graph_idx, solutions,
+                          residual: bool = True):
+        """Tuples2Graphs (paper Alg. 5 line 21): re-materialize per-tuple
+        states from (dataset source, graph ids, partial-solution masks).
+        ``residual=False`` keeps the original topology visible to the
+        policy (MaxCut semantics, see env.register)."""
+        raise NotImplementedError
+
+    # -- policy evaluation --------------------------------------------------
+    def scores(self, params: PolicyParams, state, *, num_layers: int,
+               masked: bool = True) -> jax.Array:
+        """(B, N) candidate scores: Q(EM(state), C)."""
+        raise NotImplementedError
+
+    # -- state transition ---------------------------------------------------
+    def commit(self, state, sel: jax.Array):
+        """Commit a (B, N) selection mask to the partial solution (Alg. 4
+        lines 7-9).  Returns (new_state, done)."""
+        raise NotImplementedError
+
+    # -- accounting ---------------------------------------------------------
+    def state_bytes(self, state) -> int:
+        """Peak per-step state footprint of this representation."""
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"GraphRep({self.name})"
+
+
+class DenseRep(GraphRep):
+    """(B, N, N) residual adjacency — the MXU-friendly baseline."""
+
+    name = "dense"
+
+    def init_state(self, adj) -> GraphState:
+        if isinstance(adj, GraphState):
+            return adj
+        return init_state(jnp.asarray(adj, jnp.float32))
+
+    def prepare_dataset(self, adj_stack) -> jax.Array:
+        return jnp.asarray(adj_stack, jnp.float32)
+
+    def state_from_tuples(self, source, graph_idx, solutions,
+                          residual: bool = True) -> GraphState:
+        sol = jnp.asarray(solutions, jnp.float32)
+        base = source[jnp.asarray(graph_idx)]
+        adj = residual_adjacency(base, sol) if residual else base
+        deg = adj.sum(-1)
+        cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
+        return GraphState(adj=adj, candidate=cand, solution=sol)
+
+    def scores(self, params, state: GraphState, *, num_layers,
+               masked=True) -> jax.Array:
+        return policy_scores(params, state.adj, state.solution,
+                             state.candidate, num_layers=num_layers,
+                             masked=masked)
+
+    def commit(self, state: GraphState, sel):
+        solution = jnp.maximum(state.solution, sel)
+        keep = 1.0 - sel
+        adj = state.adj * keep[:, :, None] * keep[:, None, :]
+        deg = adj.sum(-1)
+        candidate = ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
+        done = adj.sum((-1, -2)) == 0
+        return GraphState(adj=adj, candidate=candidate,
+                          solution=solution), done
+
+    def state_bytes(self, state: GraphState) -> int:
+        return int(state.adj.size * state.adj.dtype.itemsize
+                   + state.candidate.size * 4 + state.solution.size * 4)
+
+
+class SparseRep(GraphRep):
+    """(B, N, D) padded neighbor lists — O(N·maxdeg) state, immutable
+    topology, residual edges derived from the solution mask (paper §5.2)."""
+
+    name = "sparse"
+
+    def __init__(self, max_degree: Optional[int] = None):
+        self.max_degree = max_degree
+
+    def init_state(self, adj) -> SparseGraphState:
+        if isinstance(adj, SparseGraphState):
+            return adj
+        if isinstance(adj, SparseGraphBatch):
+            return sparse_init_state(adj)
+        g = sparse_batch_from_dense(np.asarray(adj), self.max_degree)
+        return sparse_init_state(g)
+
+    def prepare_dataset(self, adj_stack) -> SparseGraphBatch:
+        return sparse_batch_from_dense(np.asarray(adj_stack), self.max_degree)
+
+    def state_from_tuples(self, source: SparseGraphBatch, graph_idx,
+                          solutions, residual: bool = True
+                          ) -> SparseGraphState:
+        sol = jnp.asarray(solutions, jnp.float32)
+        gi = jnp.asarray(graph_idx)
+        nbrs, valid = source.neighbors[gi], source.valid[gi]
+        if residual:
+            deg = residual_edge_mask(nbrs, valid, sol).sum(-1)
+        else:
+            deg = valid.sum(-1)
+        cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
+        return SparseGraphState(neighbors=nbrs, valid=valid,
+                                candidate=cand, solution=sol,
+                                residual=residual)
+
+    def scores(self, params, state: SparseGraphState, *, num_layers,
+               masked=True) -> jax.Array:
+        return sparse_policy_scores(params, state, state.solution,
+                                    state.candidate, num_layers=num_layers,
+                                    masked=masked, residual=state.residual)
+
+    def commit(self, state: SparseGraphState, sel):
+        solution = jnp.maximum(state.solution, sel)
+        edge = residual_edge_mask(state.neighbors, state.valid, solution)
+        deg = edge.sum(-1)
+        candidate = ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
+        done = edge.sum((-1, -2)) == 0
+        return SparseGraphState(neighbors=state.neighbors, valid=state.valid,
+                                candidate=candidate, solution=solution,
+                                residual=state.residual), done
+
+    def state_bytes(self, state: SparseGraphState) -> int:
+        return int(state.neighbors.size * 4 + state.valid.size
+                   + state.candidate.size * 4 + state.solution.size * 4)
+
+
+DENSE = DenseRep()
+SPARSE = SparseRep()
+
+_REPS: Dict[str, GraphRep] = {"dense": DENSE, "sparse": SPARSE}
+
+
+def get_rep(rep: Union[str, GraphRep, None]) -> GraphRep:
+    """Resolve a representation name/instance to a backend singleton."""
+    if rep is None:
+        return DENSE
+    if isinstance(rep, GraphRep):
+        return rep
+    try:
+        return _REPS[rep]
+    except KeyError:
+        raise ValueError(f"unknown graph representation {rep!r}; "
+                         f"available: {sorted(_REPS)}") from None
+
+
+def rep_names():
+    return sorted(_REPS)
+
+
+def rep_for_state(state) -> GraphRep:
+    """Dispatch on a state's type (environment/agent polymorphism)."""
+    return SPARSE if isinstance(state, SparseGraphState) else DENSE

@@ -2,9 +2,15 @@
 
 The paper stores each graph as (A, C, S): adjacency matrix, candidate-node
 mask, partial-solution mask — spatially partitioned row-wise across P devices.
-On TPU we keep dense (B, N, N) adjacency blocks (MXU-friendly) for the policy
-model and provide a padded edge-list ("CSR-like") representation that retains
-the paper's sparse-storage memory win for very large graphs.
+This module holds BOTH on-device representations behind which every layer of
+the stack dispatches (DESIGN.md §1):
+
+- dense ``GraphState``: (B, N, N) residual adjacency blocks (MXU-friendly),
+  rewritten after every commit;
+- sparse ``SparseGraphState``: padded neighbor lists (B, N, D) + validity
+  masks — the paper's distributed sparse storage (§5.2) made TPU-gatherable.
+  The topology is NEVER rewritten; residual edges are derived from the
+  partial-solution mask via :func:`residual_edge_mask`.
 """
 from __future__ import annotations
 
@@ -31,22 +37,49 @@ def erdos_renyi(n: int, rho: float = 0.15, *, seed: int) -> np.ndarray:
 
 
 def barabasi_albert(n: int, d: int = 4, *, seed: int) -> np.ndarray:
-    """BA(n, d): preferential attachment, d edges per new node (paper d=4)."""
+    """BA(n, d): preferential attachment, d edges per new node (paper d=4).
+
+    Uses the repeated-endpoints trick: sampling a uniform entry of the edge
+    endpoint list IS degree-proportional sampling, so each new node costs
+    O(d) instead of the O(n) renormalized ``rng.choice(p=...)`` — the dense
+    output assembly is a single vectorized index assignment.
+    """
     rng = np.random.default_rng(seed)
-    a = np.zeros((n, n), dtype=np.float32)
-    # seed clique of d+1 nodes
     m0 = min(d + 1, n)
-    for i in range(m0):
-        for j in range(i + 1, m0):
-            a[i, j] = a[j, i] = 1.0
-    degrees = a.sum(axis=1)
+    si, sj = np.triu_indices(m0, k=1)
+    n_new = max(n - m0, 0)
+    # edge endpoint multiset: clique edges + up to d per added node
+    cap = 2 * (len(si) + n_new * d)
+    endpoints = np.empty((cap,), np.int64)
+    cnt = 2 * len(si)
+    endpoints[0:cnt:2] = si
+    endpoints[1:cnt:2] = sj
+    src = np.empty((n_new * d,), np.int64)
+    dst = np.empty((n_new * d,), np.int64)
+    ecnt = 0
     for v in range(m0, n):
-        # preferential attachment: sample d distinct targets ∝ degree
-        probs = degrees[:v] / degrees[:v].sum()
-        targets = rng.choice(v, size=min(d, v), replace=False, p=probs)
-        for t in targets:
-            a[v, t] = a[t, v] = 1.0
-        degrees = a.sum(axis=1)
+        k = min(d, v)
+        chosen: list = []
+        seen: set = set()
+        while len(chosen) < k:
+            draw = endpoints[rng.integers(0, cnt, size=2 * k)]
+            for t in draw:
+                t = int(t)
+                if t not in seen:
+                    seen.add(t)
+                    chosen.append(t)
+                    if len(chosen) == k:
+                        break
+        targets = np.asarray(chosen, np.int64)
+        src[ecnt:ecnt + k] = v
+        dst[ecnt:ecnt + k] = targets
+        endpoints[cnt:cnt + k] = v
+        endpoints[cnt + k:cnt + 2 * k] = targets
+        cnt += 2 * k
+        ecnt += k
+    a = np.zeros((n, n), dtype=np.float32)
+    a[si, sj] = a[sj, si] = 1.0
+    a[src[:ecnt], dst[:ecnt]] = a[dst[:ecnt], src[:ecnt]] = 1.0
     return a
 
 
@@ -123,9 +156,138 @@ def residual_adjacency(adj0: jax.Array, solution: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Sparse graph state: padded neighbor lists + masks (paper §4.1/§5.2).
+# The topology (neighbors, valid) is immutable; (candidate, solution) evolve.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseGraphState:
+    """Sparse counterpart of :class:`GraphState` (DESIGN.md §1).
+
+    neighbors: (B, N, D) int32 padded neighbor ids, sentinel N for padding.
+    valid:     (B, N, D) bool — static topology mask (never rewritten).
+    candidate: (B, N) float mask — the paper's C vector.
+    solution:  (B, N) float mask — the paper's S vector.
+
+    A residual edge (u, v) exists iff the original edge exists and neither
+    endpoint is in the solution — derived on the fly, O(N·D) state instead
+    of O(N²).
+
+    ``residual`` (static) records whether the policy should see the residual
+    subgraph (MVC semantics — the dense path's rewritten adjacency) or the
+    original topology (MaxCut: selecting a node does not delete edges, so
+    the dense env keeps ``adj`` intact and the sparse scorer must match).
+    """
+    neighbors: jax.Array
+    valid: jax.Array
+    candidate: jax.Array
+    solution: jax.Array
+    residual: bool = dataclasses.field(default=True,
+                                       metadata=dict(static=True))
+
+    @property
+    def batch(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def max_degree(self) -> int:
+        return self.neighbors.shape[2]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseGraphBatch:
+    """Static topology for B graphs: neighbors (B, N, D) int32 padded with
+    N (a sentinel; embeddings are padded with a zero column), valid
+    (B, N, D) bool.  Used both as the batch topology inside
+    ``SparseGraphState`` construction and as the training-dataset container
+    (G graphs indexed by the replay buffer's graph ids)."""
+    neighbors: jax.Array
+    valid: jax.Array
+
+    @property
+    def batch(self):
+        return self.neighbors.shape[0]
+
+    @property
+    def num_nodes(self):
+        return self.neighbors.shape[1]
+
+    @property
+    def max_degree(self):
+        return self.neighbors.shape[2]
+
+
+def residual_edge_mask(neighbors: jax.Array, valid: jax.Array,
+                       solution: jax.Array) -> jax.Array:
+    """(B, N, D) float residual-edge factors: valid ∧ keep[u] ∧ keep[v].
+
+    This is the sparse analogue of :func:`residual_adjacency` — instead of
+    rewriting storage it derives the residual subgraph from the immutable
+    topology and the current partial-solution mask."""
+    keep = 1.0 - solution
+    keep_pad = jnp.pad(keep, ((0, 0), (0, 1)))              # sentinel slot
+    keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_pad, neighbors)
+    return valid.astype(jnp.float32) * keep_nbr * keep[:, :, None]
+
+
+def sparse_batch_from_dense(adj: np.ndarray,
+                            max_degree: Optional[int] = None
+                            ) -> SparseGraphBatch:
+    """adj (B, N, N) → padded edge lists with a common max degree
+    (vectorized: one ``np.nonzero`` + cumcount, no per-node loop).
+
+    ``max_degree`` of None or 0 derives the width from the batch; an
+    explicit value below the true max degree raises rather than silently
+    dropping edges (which would corrupt residual degrees and candidates).
+    """
+    adj = np.asarray(adj)
+    if adj.ndim == 2:
+        adj = adj[None]
+    b, n, _ = adj.shape
+    deg = (adj > 0).sum(-1)
+    true_md = int(deg.max()) if deg.size else 0
+    if not max_degree:                       # None or 0 → derive
+        md = max(true_md, 1)
+    elif max_degree < true_md:
+        raise ValueError(
+            f"max_degree={max_degree} is below the batch's true max degree "
+            f"{true_md}; refusing to silently drop edges")
+    else:
+        md = max_degree
+    nbrs = np.full((b, n, md), n, np.int32)
+    val = np.zeros((b, n, md), bool)
+    bi, rows, cols = np.nonzero(adj > 0)
+    flat = bi * n + rows
+    counts = np.bincount(flat, minlength=b * n)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    offs = np.arange(len(flat)) - starts[flat]
+    keep = offs < md
+    nbrs[bi[keep], rows[keep], offs[keep]] = cols[keep]
+    val[bi[keep], rows[keep], offs[keep]] = True
+    return SparseGraphBatch(neighbors=jnp.asarray(nbrs),
+                            valid=jnp.asarray(val))
+
+
+def sparse_init_state(g: SparseGraphBatch) -> SparseGraphState:
+    """Fresh sparse state: empty solution; candidates = degree > 0."""
+    deg = g.valid.sum(-1)
+    return SparseGraphState(
+        neighbors=g.neighbors, valid=g.valid,
+        candidate=(deg > 0).astype(jnp.float32),
+        solution=jnp.zeros(g.neighbors.shape[:2], jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Spatially partitioned view (paper §4.1): row-block of A plus local C/S.
 # Used by repro.core.spatial inside shard_map; each device sees the block
-# for its N/P resident nodes.
+# for its N/P resident nodes (dense) or its (B, N/P, D) neighbor-list rows
+# (sparse — the paper's distributed sparse graph storage).
 # ---------------------------------------------------------------------------
 
 def pad_nodes(a: np.ndarray, p: int) -> np.ndarray:
@@ -162,14 +324,16 @@ class PaddedEdgeList:
 
 def to_padded_edgelist(a: np.ndarray, max_deg: Optional[int] = None) -> PaddedEdgeList:
     n = a.shape[-1]
-    deg = a.sum(-1).astype(np.int64)
-    md = int(deg.max()) if max_deg is None else max_deg
+    rows, cols = np.nonzero(a > 0)
+    deg = np.bincount(rows, minlength=n)
+    md = int(deg.max(initial=0)) if max_deg is None else max_deg
     nbr = np.full((n, md), n, dtype=np.int32)
     val = np.zeros((n, md), dtype=bool)
-    for v in range(n):
-        idx = np.nonzero(a[v])[0][:md]
-        nbr[v, : len(idx)] = idx
-        val[v, : len(idx)] = True
+    starts = np.concatenate([[0], np.cumsum(deg)[:-1]])
+    offs = np.arange(len(rows)) - starts[rows]
+    keep = offs < md
+    nbr[rows[keep], offs[keep]] = cols[keep]
+    val[rows[keep], offs[keep]] = True
     return PaddedEdgeList(nbr, val)
 
 

@@ -1,10 +1,12 @@
 """Parallel RL inference (paper Alg. 4) + adaptive multiple-node selection
-(paper §4.5.1).
+(paper §4.5.1), representation-polymorphic via the GraphRep backends.
 
 ``solve`` drives a batch of B graphs to complete MVC solutions using the
-(pre)trained policy.  Each iteration is one policy evaluation; with the
-adaptive schedule, up to d ∈ {8,4,2,1} top-scoring candidates are committed
-per evaluation, with d shrinking as the candidate set shrinks:
+(pre)trained policy, on EITHER the dense (B, N, N) adjacency path or the
+sparse (B, N, D) padded neighbor-list path (``rep="dense"|"sparse"``, see
+DESIGN.md §1).  Each iteration is one policy evaluation; with the adaptive
+schedule, up to d ∈ {8,4,2,1} top-scoring candidates are committed per
+evaluation, with d shrinking as the candidate set shrinks:
 
     |C| >  N/2        -> d = 8
     |C| in (N/4, N/2] -> d = 4
@@ -15,14 +17,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple, Union
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .graphs import GraphState, init_state
-from .policy import PolicyConfig, PolicyParams, policy_scores
+from .graphrep import GraphRep, get_rep
+from .policy import PolicyConfig, PolicyParams
 from .qmodel import NEG_INF
 
 MAX_D = 8
@@ -36,16 +38,18 @@ def adaptive_d(num_candidates: jax.Array, n: int) -> jax.Array:
            jnp.where(c > n / 8, 2, 1))).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("num_layers", "use_adaptive"))
-def _inference_step(params: PolicyParams, state: GraphState, *,
+@functools.partial(jax.jit,
+                   static_argnames=("rep", "num_layers", "use_adaptive"))
+def _inference_step(params: PolicyParams, state, *, rep: GraphRep,
                     num_layers: int, use_adaptive: bool):
     """One policy evaluation + top-d commit (Alg. 4 body, vectorized over B).
 
-    Finished graphs (no candidates) commit nothing.
+    Identical on both representations: the backend supplies the scores and
+    the commit rule; only the state layout differs.  Finished graphs (no
+    candidates) commit nothing.
     """
     b, n = state.candidate.shape
-    scores = policy_scores(params, state.adj, state.solution, state.candidate,
-                           num_layers=num_layers)          # (B, N) masked
+    scores = rep.scores(params, state, num_layers=num_layers)  # (B, N) masked
     top_scores, top_idx = jax.lax.top_k(scores, MAX_D)      # (B, 8)
     ncand = state.candidate.sum(-1)
     d = adaptive_d(ncand, n) if use_adaptive else jnp.ones((b,), jnp.int32)
@@ -54,13 +58,7 @@ def _inference_step(params: PolicyParams, state: GraphState, *,
     # commit mask: union of selected one-hots
     sel = jnp.zeros((b, n), jnp.float32)
     sel = sel.at[jnp.arange(b)[:, None], top_idx].max(valid.astype(jnp.float32))
-    solution = jnp.maximum(state.solution, sel)
-    keep = 1.0 - sel
-    adj = state.adj * keep[:, :, None] * keep[:, None, :]
-    deg = adj.sum(-1)
-    candidate = ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
-    done = adj.sum((-1, -2)) == 0
-    new_state = GraphState(adj=adj, candidate=candidate, solution=solution)
+    new_state, done = rep.commit(state, sel)
     return new_state, done, valid.sum(-1)
 
 
@@ -74,20 +72,24 @@ class InferenceResult:
 
 def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
           multi_node: bool = False, max_evals: Optional[int] = None,
-          step_fn: Optional[Callable] = None) -> InferenceResult:
+          step_fn: Optional[Callable] = None,
+          rep: Union[str, GraphRep] = "dense") -> InferenceResult:
     """Run Alg. 4 until every graph in the batch has a complete cover.
 
     multi_node=False reproduces the original d=1 algorithm; True enables the
-    adaptive schedule of §4.5.1.  ``step_fn`` may override the jitted step
-    (used by the spatially-partitioned path).
+    adaptive schedule of §4.5.1 — on both representations.  ``rep`` selects
+    the graph backend ("dense" | "sparse" or a GraphRep instance);
+    ``step_fn`` may override the jitted step (used by the spatially-
+    partitioned path).
     """
-    state = init_state(jnp.asarray(adj0, jnp.float32))
+    rep = get_rep(rep)
+    state = rep.init_state(adj0)
     n = state.num_nodes
     max_evals = max_evals or (n + MAX_D)
     evals = 0
     committed = np.zeros((state.batch,), np.int64)
     fn = step_fn or (lambda p, s: _inference_step(
-        p, s, num_layers=num_layers, use_adaptive=multi_node))
+        p, s, rep=rep, num_layers=num_layers, use_adaptive=multi_node))
     for _ in range(max_evals):
         state, done, ncommit = fn(params, state)
         evals += 1

@@ -38,6 +38,7 @@ class PolicyConfig:
     eps_decay_steps: int = 500
     minibatch: int = 64          # B tuples per GD iteration
     grad_iters: int = 1          # τ (paper §4.5.2)
+    graph_rep: str = "dense"     # GraphRep backend: "dense" | "sparse"
 
 
 def init_policy(key: jax.Array, cfg: PolicyConfig) -> PolicyParams:

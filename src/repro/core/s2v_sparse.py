@@ -10,124 +10,127 @@ memory O(N·maxdeg) instead of O(N²), and no per-step adjacency rewrite.
 
 This is the TPU adaptation of the paper's COO/cuSPARSE storage (DESIGN.md
 §2): gathers over a padded index tensor instead of sparse matmuls.
+
+``embed_sparse_local`` is the distributed form (paper Alg. 2 on sparse
+storage): each device holds the (B, N/P, D) neighbor-list rows of its
+resident nodes; one all-gather of the (B, K, N) embedding buffer per layer
+replaces the dense path's all-reduce.  ``gather_impl`` plugs in the Pallas
+kernel from ``repro.kernels.s2v_gather`` for the aggregation hot loop.
+
+The solve driver lives in ``repro.core.inference`` — use
+``solve(..., rep="sparse")``; representation dispatch is handled by
+``repro.core.graphrep``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-from .graphs import to_padded_edgelist
+from .graphs import (SparseGraphBatch, SparseGraphState, residual_edge_mask,
+                     sparse_batch_from_dense)
 from .policy import PolicyParams
 from .qmodel import scores_local, NEG_INF
 
-
-@dataclasses.dataclass(frozen=True)
-class SparseGraphBatch:
-    """Static topology for B graphs: neighbors (B, N, D) int32 padded with
-    N (a sentinel; embeddings are padded with a zero column), valid
-    (B, N, D) bool."""
-    neighbors: jax.Array
-    valid: jax.Array
-
-    @property
-    def batch(self):
-        return self.neighbors.shape[0]
-
-    @property
-    def num_nodes(self):
-        return self.neighbors.shape[1]
-
-
-def sparse_batch_from_dense(adj: np.ndarray) -> SparseGraphBatch:
-    """adj (B, N, N) → padded edge lists with a common max degree."""
-    els = [to_padded_edgelist(a) for a in np.asarray(adj)]
-    d = max(e.neighbors.shape[1] for e in els) or 1
-    nbrs, valid = [], []
-    n = els[0].num_nodes
-    for e in els:
-        pad = d - e.neighbors.shape[1]
-        nbrs.append(np.pad(e.neighbors, ((0, 0), (0, pad)),
-                           constant_values=n))
-        valid.append(np.pad(e.valid, ((0, 0), (0, pad))))
-    return SparseGraphBatch(neighbors=jnp.asarray(np.stack(nbrs)),
-                            valid=jnp.asarray(np.stack(valid)))
+__all__ = ["SparseGraphBatch", "sparse_batch_from_dense", "embed_sparse",
+           "embed_sparse_local", "sparse_policy_scores", "sparse_state_bytes"]
 
 
 def _gather_neighbors(x: jax.Array, nbrs: jax.Array) -> jax.Array:
-    """x (B, K, N+1) [zero-padded], nbrs (B, N, D) → (B, K, N, D)."""
+    """x (B, K, N+1) [zero-padded], nbrs (B, Nl, D) → (B, K, Nl, D)."""
     return jax.vmap(lambda xb, nb: xb[:, nb])(x, nbrs)
 
 
-def embed_sparse(params, g: SparseGraphBatch, sol: jax.Array, *,
-                 num_layers: int) -> jax.Array:
-    """structure2vec over the RESIDUAL graph implied by (topology, S).
+def _gather_aggregate(xp: jax.Array, nbrs: jax.Array,
+                      edge: jax.Array) -> jax.Array:
+    """Reference aggregation: Σ_d xp[b,k,nbrs[b,i,d]]·edge[b,i,d] → (B,K,Nl).
+    The Pallas kernel (``repro.kernels.s2v_gather``) implements the same
+    contract tiled through VMEM."""
+    gathered = _gather_neighbors(xp, nbrs)                  # (B, K, Nl, D)
+    return jnp.einsum("bknd,bnd->bkn", gathered, edge)
 
-    sol (B, N) partial-solution mask.  Residual edge mask: valid ∧ keep[u]
-    ∧ keep[v].  Returns (B, K, N)."""
-    b, n, d = g.neighbors.shape
+
+def _default_gather_impl() -> Optional[Callable]:
+    """Production default for the aggregation hot loop: the Pallas gather
+    kernel on TPU (VMEM-tiled, avoids materializing the (B, K, N, D)
+    gather transient in HBM); pure-jnp gather elsewhere, where XLA's fused
+    gather beats the interpret-mode kernel."""
+    if jax.default_backend() == "tpu":
+        from ..kernels.ops import sparse_mp_aggregate
+        return sparse_mp_aggregate
+    return None
+
+
+def embed_sparse_local(params, nbr_local: jax.Array, edge_local: jax.Array,
+                       sol_local: jax.Array, *, num_layers: int,
+                       axis: Optional[str] = None,
+                       gather_impl: Optional[Callable] = None) -> jax.Array:
+    """structure2vec over the residual graph implied by (topology, S),
+    computed for the N/P resident nodes of this device (Alg. 2 on sparse
+    storage).
+
+    nbr_local (B, Nl, D) int32 GLOBAL neighbor ids; edge_local (B, Nl, D)
+    residual-edge factors; sol_local (B, Nl).  With ``axis`` naming a
+    shard_map mesh axis, each layer all-gathers the (B, K, N) embedding
+    buffer so local gathers can reach remote-resident neighbors; axis=None
+    is the single-device path (Nl == N).  Returns (B, K, Nl)."""
+    b, nl, d = nbr_local.shape
     k = params.theta1.shape[0]
-    keep = 1.0 - sol                                        # (B, N)
-    keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(
-        jnp.pad(keep, ((0, 0), (0, 1))), g.neighbors)       # (B, N, D)
-    edge = g.valid.astype(jnp.float32) * keep_nbr * keep[:, :, None]
+    agg = gather_impl or _default_gather_impl() or _gather_aggregate
 
-    deg = edge.sum(-1)                                      # residual degree
-    embed1 = params.theta1[None, :, None] * sol[:, None, :]
+    deg = edge_local.sum(-1)                                # residual degree
+    embed1 = params.theta1[None, :, None] * sol_local[:, None, :]
     w = jax.nn.relu(params.theta2[None, :, None] * deg[:, None, :])
     embed2 = jnp.einsum("kj,bjn->bkn", params.theta3, w)
 
-    embed = jnp.zeros((b, k, n), jnp.float32)
+    embed = jnp.zeros((b, k, nl), jnp.float32)
     for _ in range(num_layers):
-        xp = jnp.pad(embed, ((0, 0), (0, 0), (0, 1)))       # sentinel col
-        gathered = _gather_neighbors(xp, g.neighbors)       # (B, K, N, D)
-        nbr = jnp.einsum("bknd,bnd->bkn", gathered, edge)
+        if axis is not None:
+            # distributed sparse storage: gather the full embedding buffer
+            # (the sparse analogue of the dense path's MPI_All_reduce)
+            full = lax.all_gather(embed, axis, axis=2, tiled=True)
+        else:
+            full = embed                                     # Nl == N
+        xp = jnp.pad(full, ((0, 0), (0, 0), (0, 1)))         # sentinel col
+        nbr = agg(xp, nbr_local, edge_local)                 # (B, K, Nl)
         embed3 = jnp.einsum("kj,bjn->bkn", params.theta4, nbr)
         embed = jax.nn.relu(embed1 + embed2 + embed3)
     return embed
 
 
-def sparse_policy_scores(params: PolicyParams, g: SparseGraphBatch,
-                         sol: jax.Array, cand: jax.Array, *,
-                         num_layers: int, masked: bool = True) -> jax.Array:
-    emb = embed_sparse(params.em, g, sol, num_layers=num_layers)
+def embed_sparse(params, g, sol: jax.Array, *, num_layers: int,
+                 residual: bool = True,
+                 gather_impl: Optional[Callable] = None) -> jax.Array:
+    """Single-device convenience wrapper: derives the residual-edge factors
+    from (topology, S) and embeds all N nodes.  ``g`` is anything carrying
+    ``neighbors``/``valid`` — a SparseGraphBatch or SparseGraphState.
+    ``residual=False`` embeds the original topology instead (MaxCut
+    semantics — selecting a node does not delete edges)."""
+    if residual:
+        edge = residual_edge_mask(g.neighbors, g.valid, sol)
+    else:
+        edge = g.valid.astype(jnp.float32)
+    return embed_sparse_local(params, g.neighbors, edge, sol,
+                              num_layers=num_layers, axis=None,
+                              gather_impl=gather_impl)
+
+
+def sparse_policy_scores(params: PolicyParams, g, sol: jax.Array,
+                         cand: jax.Array, *, num_layers: int,
+                         masked: bool = True, residual: bool = True,
+                         gather_impl: Optional[Callable] = None) -> jax.Array:
+    emb = embed_sparse(params.em, g, sol, num_layers=num_layers,
+                       residual=residual, gather_impl=gather_impl)
     return scores_local(params.q, emb, cand, masked=masked)
 
 
-def solve_sparse(params: PolicyParams, adj: np.ndarray, *,
-                 num_layers: int = 2, max_steps: Optional[int] = None):
-    """Alg. 4 (d=1) on the sparse path: the adjacency is NEVER rewritten —
-    only the S/C masks update.  Returns (solution (B,N), steps)."""
-    g = sparse_batch_from_dense(adj)
-    b, n = g.batch, g.num_nodes
-    sol = jnp.zeros((b, n), jnp.float32)
-
-    @jax.jit
-    def step(sol):
-        keep = 1.0 - sol
-        keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(
-            jnp.pad(keep, ((0, 0), (0, 1))), g.neighbors)
-        edge = g.valid.astype(jnp.float32) * keep_nbr * keep[:, :, None]
-        deg = edge.sum(-1)
-        cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
-        scores = sparse_policy_scores(params, g, sol, cand,
-                                      num_layers=num_layers)
-        v = jnp.argmax(scores, axis=-1)
-        active = cand.sum(-1) > 0
-        sel = jax.nn.one_hot(v, n) * active[:, None]
-        return jnp.maximum(sol, sel), active.any()
-
-    steps = 0
-    for _ in range(max_steps or n):
-        sol, anyleft = step(sol)
-        steps += 1
-        if not bool(anyleft):
-            break
-    return np.asarray(sol), steps
-
-
-def sparse_state_bytes(g: SparseGraphBatch) -> int:
-    return g.neighbors.size * 4 + g.valid.size
+def sparse_state_bytes(g) -> int:
+    """Peak per-step state bytes of the sparse representation (topology +
+    masks if ``g`` is a state; topology only for a SparseGraphBatch)."""
+    total = g.neighbors.size * 4 + g.valid.size
+    if isinstance(g, SparseGraphState):
+        total += g.candidate.size * 4 + g.solution.size * 4
+    return total

@@ -1,10 +1,18 @@
 """Spatial parallelism (paper §4.1): shard one graph's state row-wise across
 P devices and evaluate the policy with per-layer collectives.
 
-``spatial_scores`` is the paper's Alg. 2 + Alg. 3 + Alg. 4 lines 4-6 wrapped
-in ``jax.shard_map`` over a 1-D ``graph`` mesh axis: each device holds
-(B, N/P, N) adjacency rows and (B, N/P) mask slices, computes local scores,
-and the all-gather returns the full (B, N) score vector on every device.
+``spatial_scores_fn`` is the paper's Alg. 2 + Alg. 3 + Alg. 4 lines 4-6
+wrapped in ``jax.shard_map`` over a 1-D ``graph`` mesh axis: each device
+holds (B, N/P, N) adjacency rows and (B, N/P) mask slices, computes local
+scores, and the all-gather returns the full (B, N) score vector on every
+device.
+
+``sparse_spatial_scores_fn`` is the same algorithm on the paper's
+DISTRIBUTED SPARSE GRAPH STORAGE (§4.1, §5.2): each device holds the
+(B, N/P, D) padded neighbor-list rows of its resident nodes — O(N·maxdeg/P)
+per device instead of O(N²/P) — plus local C/S mask slices.  Per embedding
+layer the (B, K, N) embedding buffer is all-gathered so local gathers can
+reach remote-resident neighbors (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -17,33 +25,36 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from .policy import PolicyParams, policy_scores
+from .qmodel import scores_local
+from .s2v_sparse import embed_sparse_local
 
 AXIS = "graph"
 
 
 def make_graph_mesh(p: Optional[int] = None) -> jax.sharding.Mesh:
     """1-D mesh over the paper's P GPUs (here: P host devices)."""
+    from ..sharding.compat import auto_axis_types_kw
     devs = jax.devices()
     p = len(devs) if p is None else p
-    return jax.make_mesh((p,), (AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.make_mesh((p,), (AXIS,), **auto_axis_types_kw(1))
 
 
 def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
                       mp_impl=None):
-    """Build the P-way partitioned scorer.
+    """Build the P-way partitioned scorer (dense representation).
 
     in:  adj (B, N, N), sol (B, N), cand (B, N)   [sharded on node rows]
     out: scores (B, N) replicated (post all-gather, Alg. 4 line 6).
     """
 
+    from ..sharding.compat import shard_map_nocheck
+
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map_nocheck, mesh=mesh,
         in_specs=(P(), P(None, AXIS, None), P(None, AXIS), P(None, AXIS)),
         out_specs=P(),
         # all_gather output is value-identical on every device (Alg. 4 line
-        # 6); VMA inference can't prove that statically, so disable the check.
-        check_vma=False,
+        # 6); VMA/rep inference can't prove that statically → disable check.
     )
     def scorer(params: PolicyParams, adj_l, sol_l, cand_l):
         local = policy_scores(params, adj_l, sol_l, cand_l,
@@ -52,6 +63,42 @@ def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
         # Alg. 4 line 6: MPI_All_gather of the (B, N/P) local scores.
         gathered = lax.all_gather(local, AXIS, axis=1, tiled=True)
         return gathered
+
+    return scorer
+
+
+def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
+                             gather_impl=None):
+    """Build the P-way partitioned scorer on distributed sparse storage.
+
+    in:  neighbors (B, N, D) int32, valid (B, N, D) bool, sol (B, N),
+         cand (B, N)   [all sharded on the node axis: each device holds the
+         (B, N/P, D) neighbor-list rows of its resident nodes]
+    out: scores (B, N) replicated.
+    """
+
+    from ..sharding.compat import shard_map_nocheck
+
+    @functools.partial(
+        shard_map_nocheck, mesh=mesh,
+        in_specs=(P(), P(None, AXIS, None), P(None, AXIS, None),
+                  P(None, AXIS), P(None, AXIS)),
+        out_specs=P(),
+    )
+    def scorer(params: PolicyParams, nbr_l, valid_l, sol_l, cand_l):
+        # Residual-edge factors need keep[] of REMOTE neighbor endpoints:
+        # one all-gather of the (B, N) solution mask (4·N·B bytes — paper
+        # §5.1's C/S broadcast).
+        sol_full = lax.all_gather(sol_l, AXIS, axis=1, tiled=True)
+        keep_full = jnp.pad(1.0 - sol_full, ((0, 0), (0, 1)))  # sentinel
+        keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_full, nbr_l)
+        keep_l = 1.0 - sol_l
+        edge_l = valid_l.astype(jnp.float32) * keep_nbr * keep_l[:, :, None]
+        emb_l = embed_sparse_local(params.em, nbr_l, edge_l, sol_l,
+                                   num_layers=num_layers, axis=AXIS,
+                                   gather_impl=gather_impl)
+        local = scores_local(params.q, emb_l, cand_l, axis=AXIS, masked=True)
+        return lax.all_gather(local, AXIS, axis=1, tiled=True)
 
     return scorer
 
@@ -65,12 +112,35 @@ def shard_graph_arrays(mesh, adj, sol, cand):
     return adj, sol, cand
 
 
+def shard_sparse_arrays(mesh, neighbors, valid, sol, cand):
+    """Place the sparse state with the paper's row partitioning: each device
+    receives the (B, N/P, D) neighbor-list block of its resident nodes."""
+    ns = jax.sharding.NamedSharding
+    neighbors = jax.device_put(neighbors, ns(mesh, P(None, AXIS, None)))
+    valid = jax.device_put(valid, ns(mesh, P(None, AXIS, None)))
+    sol = jax.device_put(sol, ns(mesh, P(None, AXIS)))
+    cand = jax.device_put(cand, ns(mesh, P(None, AXIS)))
+    return neighbors, valid, sol, cand
+
+
 def per_device_bytes(n: int, b: int, rho: float, p: int,
                      replay_tuples: int = 0) -> dict:
     """Paper §5.2 memory model, per device: sparse-COO adjacency
     20·N²·ρ·B/P bytes, masks 4·N·B/P each, replay 8·R·(N/P + 1)."""
     return {
         "adjacency": 20.0 * n * n * rho * b / p,
+        "solution": 4.0 * n * b / p,
+        "candidates": 4.0 * n * b / p,
+        "replay": 8.0 * replay_tuples * (n / p + 1),
+    }
+
+
+def sparse_per_device_bytes(n: int, max_deg: int, b: int, p: int,
+                            replay_tuples: int = 0) -> dict:
+    """Padded edge-list storage per device (this repo's TPU adaptation of
+    §5.2): 4-byte neighbor ids + 1-byte validity per slot, masks as above."""
+    return {
+        "adjacency": 5.0 * n * max_deg * b / p,
         "solution": 4.0 * n * b / p,
         "candidates": 4.0 * n * b / p,
         "replay": 8.0 * replay_tuples * (n / p + 1),

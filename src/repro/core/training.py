@@ -8,20 +8,22 @@ per-device work and collectives are identical (DESIGN.md §2).
 ``train_agent`` is the episode driver: pick a training graph, roll the env,
 remember compressed tuples, run τ GD iterations per step, periodically
 evaluate solution quality on held-out test graphs (paper §6.2 learning
-curves).
+curves).  The whole loop is representation-polymorphic: ``rep`` selects the
+GraphRep backend, and the dataset, episode states and replay
+re-materialization all flow through it (DESIGN.md §1).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 import numpy as np
 import jax.numpy as jnp
 
 from . import env as env_lib
 from .agent import Agent
-from .graphs import init_state
+from .graphrep import GraphRep, get_rep
 from .inference import solve
 from .solvers import mvc_lower_bound, exact_mvc_size
 
@@ -38,10 +40,13 @@ class TrainLog:
 
 def evaluate_quality(agent: Agent, test_adj: np.ndarray,
                      reference_sizes: np.ndarray, *,
-                     multi_node: bool = False) -> float:
-    """Average approximation ratio |RL solution| / |reference| (paper §6.2)."""
+                     multi_node: bool = False,
+                     rep: Union[str, GraphRep, None] = None) -> float:
+    """Average approximation ratio |RL solution| / |reference| (paper §6.2).
+    ``rep=None`` follows the agent's configured backend."""
+    rep = get_rep(rep if rep is not None else agent.cfg.graph_rep)
     res = solve(agent.params, test_adj, num_layers=agent.cfg.num_layers,
-                multi_node=multi_node)
+                multi_node=multi_node, rep=rep)
     return float(np.mean(res.sizes / np.maximum(reference_sizes, 1)))
 
 
@@ -50,6 +55,7 @@ def train_agent(
     train_adj: np.ndarray,            # (G, N, N) training graph dataset
     *,
     problem: str = "mvc",
+    rep: Union[str, GraphRep, None] = None,   # None → agent.cfg.graph_rep
     episodes: int = 50,
     tau: Optional[int] = None,        # GD iterations per env step (§4.5.2)
     batch_graphs: int = 1,            # graphs stepped together per episode
@@ -59,9 +65,13 @@ def train_agent(
     seed: int = 0,
 ) -> TrainLog:
     rng = np.random.default_rng(seed)
+    rep = get_rep(rep if rep is not None else agent.cfg.graph_rep)
     step_fn = env_lib.make(problem)
-    adj_stack = jnp.asarray(train_adj, jnp.float32)
-    g_count, n, _ = train_adj.shape
+    residual = env_lib.residual_semantics(problem)
+    # Dataset in the chosen representation, device-resident once (sparse:
+    # (G, N, D) neighbor lists — the paper's compressed training storage).
+    source = rep.prepare_dataset(train_adj)
+    g_count, n, _ = np.asarray(train_adj).shape
     log = TrainLog()
     t0 = time.time()
     total_steps = 0
@@ -69,7 +79,9 @@ def train_agent(
     for _ep in range(episodes):
         # Alg. 5 line 4: random training graph(s), same across all devices.
         gi = rng.integers(0, g_count, size=batch_graphs)
-        state = init_state(adj_stack[jnp.asarray(gi)])
+        state = rep.state_from_tuples(
+            source, gi, np.zeros((batch_graphs, n), np.float32),
+            residual=residual)
         ep_len = 0
         for _t in range(n):
             if max_steps is not None and total_steps >= max_steps:
@@ -78,7 +90,7 @@ def train_agent(
             new_state, reward, done = step_fn(state, jnp.asarray(action))
             agent.remember(gi, state, action, np.asarray(reward), new_state,
                            np.asarray(done))
-            loss = agent.train(adj_stack, tau=tau)
+            loss = agent.train(source, tau=tau, residual=residual)
             state = new_state
             ep_len += 1
             total_steps += 1

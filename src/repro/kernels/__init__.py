@@ -1,12 +1,16 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-- s2v_mp: structure2vec message passing (paper Alg. 2) — blocked batched
-  matmul + fused θ4/ReLU epilogue.
+- s2v_mp:     dense structure2vec message passing (paper Alg. 2) — blocked
+  batched matmul + fused θ4/ReLU epilogue.
+- s2v_gather: sparse (padded edge-list) structure2vec aggregation — on-chip
+  one-hot expansion + MXU matmul over the (B, N, D) neighbor lists.
 - wkv6:   chunked RWKV-6 linear-attention recurrence.
 - swa:    sliding-window causal flash attention.
 
 Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
-jit'd public entry points (interpret mode on CPU, compiled on TPU).
+jit'd public entry points (interpret mode auto-detected per backend, see
+``backend.py``).
 """
 from . import ops, ref
-from .ops import s2v_layer, mp_aggregate, wkv6, swa, grouped_glu_ffn
+from .ops import (s2v_layer, mp_aggregate, sparse_mp_aggregate, wkv6, swa,
+                  grouped_glu_ffn)

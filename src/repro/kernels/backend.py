@@ -1,0 +1,28 @@
+"""Backend selection for the Pallas kernels in this package.
+
+Kernels run compiled on TPU and fall back to interpret mode elsewhere
+(CPU CI containers, GPU hosts without Mosaic).  The decision is made once
+per call site from ``jax.default_backend()`` and can be forced either way
+with the ``REPRO_PALLAS_INTERPRET`` environment variable (``1``/``true`` →
+always interpret, ``0``/``false`` → always compile).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """True → run Pallas kernels in interpret mode (non-TPU backends)."""
+    env = os.environ.get(_ENV_VAR)
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """Resolve an ``interpret: bool | None`` kernel argument."""
+    return default_interpret() if interpret is None else bool(interpret)

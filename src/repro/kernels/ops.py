@@ -12,14 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .backend import default_interpret as _default_interpret
 from .s2v_mp import s2v_layer as _s2v_layer, mp_aggregate as _mp_aggregate
+from .s2v_gather import sparse_mp_aggregate as _sparse_mp_aggregate
 from .wkv6 import wkv6_chunked as _wkv6_chunked
 from .swa import swa_attention as _swa_attention
 from .moe_gemm import grouped_glu_ffn as _grouped_glu_ffn
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "tile_l", "interpret"))
@@ -37,6 +35,15 @@ def mp_aggregate(embed, adj, *, tile_n: int = 128, tile_l: int = 128,
     interpret = _default_interpret() if interpret is None else interpret
     return _mp_aggregate(embed, adj, tile_n=tile_n, tile_l=tile_l,
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def sparse_mp_aggregate(x, neighbors, edge, *, tile_n: int = 128,
+                        interpret: bool | None = None):
+    """Sparse (padded edge-list) s2v neighbor aggregation (gather kernel)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _sparse_mp_aggregate(x, neighbors, edge, tile_n=tile_n,
+                                interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -32,6 +32,18 @@ def s2v_layer(theta4, embed, adj, base) -> jax.Array:
     return mp_epilogue(theta4, mp_aggregate(embed, adj), base)
 
 
+def sparse_mp_aggregate(x: jax.Array, neighbors: jax.Array,
+                        edge: jax.Array) -> jax.Array:
+    """Sparse (padded edge-list) neighbor aggregation:
+    nbr_sum[b,k,i] = Σ_d x[b,k,neighbors[b,i,d]] · edge[b,i,d].
+
+    x (B, K, N+1) with a zero sentinel column; neighbors (B, N, D) int32
+    padded with N; edge (B, N, D) residual-edge factors."""
+    gathered = jax.vmap(lambda xb, nb: xb[:, nb])(
+        x.astype(jnp.float32), neighbors)                   # (B, K, N, D)
+    return jnp.einsum("bknd,bnd->bkn", gathered, edge.astype(jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # WKV6: RWKV-6 ("Finch") linear-attention recurrence with data-dependent
 # per-channel decay.  Shapes: r/k/w (BH, T, dk), v (BH, T, dv), u (BH, dk).

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the SPARSE structure2vec neighbor aggregation —
+the hot loop of the padded edge-list path (paper §4.1/§5.2, DESIGN.md §1/§2):
+
+    nbr_sum[b, k, i] = Σ_d  x[b, k, neighbors[b, i, d]] · edge[b, i, d]
+
+where ``x`` is the (B, K, N+1) embedding buffer with a zero sentinel column
+and ``edge`` carries the residual-edge factors (valid ∧ keep[u] ∧ keep[v]).
+
+The GPU original uses cuSPARSE COO SpMM; TPUs have no efficient gather along
+the lane dimension, so the kernel restructures the gather as an on-chip
+one-hot expansion + MXU matmul (DESIGN.md §2): for each VMEM-resident tile
+of TN nodes it accumulates a (TN, N+1) selection matrix M with
+M[i, j] = Σ_d edge[i, d]·[neighbors[i, d] = j], then emits the tile output
+as x @ Mᵀ on the MXU.  The selection matrix never leaves VMEM and HBM
+traffic stays O(N·maxdeg + K·N) — the sparse representation's win — while
+the arithmetic runs on MXU tiles like the dense kernel in ``s2v_mp.py``.
+
+θ4-projection + ReLU reuse ``s2v_mp.mp_epilogue``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
+
+
+def _sparse_agg_kernel(nbr_ref, edge_ref, x_ref, o_ref, m_scratch):
+    """Grid (B, N/TN).  Blocks: nbr/edge (1, TN, D), x (1, K, N+1),
+    out (1, K, TN); m_scratch (TN, N+1) VMEM accumulator."""
+    nbr = nbr_ref[0]                                        # (TN, D) int32
+    w = edge_ref[0]                                         # (TN, D) f32
+    tn, dmax = nbr.shape
+    np1 = m_scratch.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tn, np1), 1)
+
+    def body(d, m):
+        onehot = (cols == nbr[:, d][:, None]).astype(jnp.float32)
+        return m + w[:, d][:, None] * onehot
+
+    m_scratch[...] = jax.lax.fori_loop(
+        0, dmax, body, jnp.zeros((tn, np1), jnp.float32))
+    # out[k, i] = Σ_j x[k, j] · M[i, j]  — MXU contraction over j
+    o_ref[0] = jax.lax.dot_general(
+        x_ref[0], m_scratch[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def sparse_mp_aggregate(x: jax.Array, neighbors: jax.Array,
+                        edge: jax.Array, *, tile_n: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """Gather-based sparse message passing, tiled through VMEM.
+
+    x:         (B, K, N+1) float — embeddings, zero sentinel column at N.
+    neighbors: (B, N, D) int32 — padded neighbor ids (sentinel N).
+    edge:      (B, N, D) float — residual-edge factors (0 for padding).
+    Returns (B, K, N) float32, matching ``ref.sparse_mp_aggregate``.
+    """
+    interpret = resolve_interpret(interpret)
+    b, k, np1 = x.shape
+    _, n, d = neighbors.shape
+    tn = min(tile_n, n)
+    pad = (-n) % tn
+    if pad:
+        # padding nodes point at the sentinel column with zero edge weight
+        neighbors = jnp.pad(neighbors, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=np1 - 1)
+        edge = jnp.pad(edge, ((0, 0), (0, pad), (0, 0)))
+    npad = n + pad
+
+    out = pl.pallas_call(
+        _sparse_agg_kernel,
+        grid=(b, npad // tn),
+        in_specs=[
+            pl.BlockSpec((1, tn, d), lambda bi, ni: (bi, ni, 0)),
+            pl.BlockSpec((1, tn, d), lambda bi, ni: (bi, ni, 0)),
+            pl.BlockSpec((1, k, np1), lambda bi, ni: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, tn), lambda bi, ni: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, k, npad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tn, np1), jnp.float32)],
+        interpret=interpret,
+    )(neighbors.astype(jnp.int32), edge.astype(jnp.float32),
+      x.astype(jnp.float32))
+    return out[:, :, :n]

@@ -11,6 +11,8 @@ restructure to dense MXU tiles staged through VMEM (DESIGN.md §2):
   one HBM round-trip of the (B, K, N/P) embedding tensor.
 
 Tile sizes default to MXU-aligned (128) and are clamped for small problems.
+``interpret=None`` auto-detects the backend (compiled on TPU, interpret
+elsewhere; override with REPRO_PALLAS_INTERPRET — see ``backend.py``).
 """
 from __future__ import annotations
 
@@ -20,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
 
 
 def _agg_kernel(e_ref, a_ref, o_ref, acc):
@@ -40,8 +44,10 @@ def _agg_kernel(e_ref, a_ref, o_ref, acc):
 
 
 def mp_aggregate(embed: jax.Array, adj: jax.Array, *, tile_n: int = 128,
-                 tile_l: int = 128, interpret: bool = True) -> jax.Array:
+                 tile_l: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
     """nbr[b,k,n] = Σ_l embed[b,k,l]·adj[b,l,n] with VMEM-blocked tiles."""
+    interpret = resolve_interpret(interpret)
     b, k, nl = embed.shape
     _, _, n = adj.shape
     tn = min(tile_n, n)
@@ -76,7 +82,9 @@ def _epi_kernel(t4_ref, nbr_ref, base_ref, o_ref):
 
 
 def mp_epilogue(theta4: jax.Array, nbr: jax.Array, base: jax.Array, *,
-                tile_n: int = 128, interpret: bool = True) -> jax.Array:
+                tile_n: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     b, k, nl = nbr.shape
     tn = min(tile_n, nl)
     pad = (-nl) % tn
@@ -102,9 +110,10 @@ def mp_epilogue(theta4: jax.Array, nbr: jax.Array, base: jax.Array, *,
 
 
 def s2v_layer(theta4, embed, adj, base, *, tile_n: int = 128,
-              tile_l: int = 128, interpret: bool = True) -> jax.Array:
+              tile_l: int = 128, interpret: bool | None = None) -> jax.Array:
     """One fused embedding layer on local data (no collective — the psum
     between aggregate and epilogue lives in repro.core.s2v)."""
+    interpret = resolve_interpret(interpret)
     nbr = mp_aggregate(embed, adj, tile_n=tile_n, tile_l=tile_l,
                        interpret=interpret)
     return mp_epilogue(theta4, nbr, base, tile_n=tile_n, interpret=interpret)

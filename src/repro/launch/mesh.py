@@ -24,10 +24,9 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run) "
             "or on real hardware")
     import numpy as np
+    from ..sharding.compat import auto_axis_types_kw
     dev_array = np.asarray(devices[:ndev]).reshape(shape)
-    return jax.sharding.Mesh(
-        dev_array, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(dev_array, axes, **auto_axis_types_kw(len(axes)))
 
 
 def make_host_mesh(p: int | None = None) -> jax.sharding.Mesh:
@@ -35,6 +34,7 @@ def make_host_mesh(p: int | None = None) -> jax.sharding.Mesh:
     devs = jax.devices()
     p = len(devs) if p is None else p
     import numpy as np
+    from ..sharding.compat import auto_axis_types_kw
     return jax.sharding.Mesh(
         np.asarray(devs[:p]).reshape(1, p), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        **auto_axis_types_kw(2))

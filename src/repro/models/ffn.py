@@ -249,8 +249,9 @@ def moe_sharded_apply(p, x, *, cfg, mesh, mode: str = "allreduce",
     in_specs = (expert_specs["router"], expert_specs["ewg"],
                 expert_specs["ewu"], expert_specs["ewo"], x_spec)
     out_specs = (x_spec, P())
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    from ..sharding.compat import shard_map_nocheck
+    fn = shard_map_nocheck(local_fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs)
     y, aux = fn(p["router"], p["ewg"], p["ewu"], p["ewo"], x)
     if "shared" in p:
         y = y + mlp_apply(p["shared"], x, gated=True, sharder=sharder)

@@ -1,0 +1,36 @@
+"""Compatibility shims across JAX API generations.
+
+The repo targets current JAX (``jax.shard_map``, ``check_vma``,
+``jax.sharding.AxisType``) but must also run on older runtimes where
+shard_map still lives in ``jax.experimental`` (``check_rep``) and meshes
+have no axis_types.  Everything version-dependent funnels through here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _NOCHECK = {"check_vma": False}
+else:                                                # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NOCHECK = {"check_rep": False}
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def shard_map_nocheck(fn=None, **kw):
+    """``jax.shard_map`` with replication/VMA checking disabled, spelled
+    correctly for the running JAX version.  Usable as decorator or call."""
+    if fn is None:
+        return functools.partial(shard_map_nocheck, **kw)
+    return _shard_map(fn, **kw, **_NOCHECK)
+
+
+def auto_axis_types_kw(n_axes: int) -> dict:
+    """``axis_types=(Auto,)*n`` kwargs when the runtime supports them."""
+    if HAS_AXIS_TYPES:
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}

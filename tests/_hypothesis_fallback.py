@@ -1,0 +1,94 @@
+"""Deterministic micro-fallback for ``hypothesis`` (CI satellite).
+
+The real hypothesis package is preferred (see requirements.txt); when it is
+not installed this shim is registered as ``sys.modules["hypothesis"]`` by
+``conftest.py`` so the property-test modules still collect and run.  It
+implements exactly the subset this suite uses — ``given``, ``settings`` and
+the ``integers`` / ``sampled_from`` / ``floats`` / ``booleans`` strategies —
+by replaying a fixed number of seeded pseudo-random examples (no shrinking,
+no database).
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+
+_FALLBACK_MAX_EXAMPLES = 8          # cap: this is a smoke shim, not a fuzzer
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng: random.Random):
+        return self._sampler(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 8, **_kw) -> _Strategy:
+    def sample(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(size)]
+    return _Strategy(sample)
+
+
+def given(*strategies_pos, **strategies_kw):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            limit = (getattr(wrapper, "_max_examples", None)
+                     or getattr(fn, "_max_examples", None)
+                     or _FALLBACK_MAX_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(min(limit, _FALLBACK_MAX_EXAMPLES)):
+                vals = [s.sample(rng) for s in strategies_pos]
+                kvals = {k: s.sample(rng) for k, s in strategies_kw.items()}
+                fn(*args, *vals, **kwargs, **kvals)
+        # pytest plugins (e.g. anyio) introspect ``fn.hypothesis.inner_test``
+        wrapper.hypothesis = type("_Hyp", (), {"inner_test": fn})()
+        # pytest must NOT see the strategy parameters as fixture requests
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _FALLBACK_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def assume(condition) -> bool:
+    """No-op approximation: silently accept (examples are unconditioned)."""
+    return bool(condition)
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+
+
+# ``from hypothesis import strategies as st`` resolves this attribute; the
+# shim module doubles as its own strategies namespace (conftest.py sets
+# ``strategies = <module>`` after loading, since exec_module runs before the
+# module is registered in sys.modules).
+strategies = None

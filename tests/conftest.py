@@ -1,8 +1,26 @@
+import importlib.util
 import os
+import pathlib
+import sys
 
 # Smoke tests and benches must see the real (single) CPU device.  The
 # multi-pod dry-run sets XLA_FLAGS itself before importing jax — never here.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Property-test modules import hypothesis at module scope; without this
+# guard a missing hypothesis aborts collection of the WHOLE suite.  Prefer
+# the real package, fall back to the deterministic shim next to this file.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.strategies = _mod
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod
 
 import numpy as np
 import pytest

@@ -1,0 +1,166 @@
+"""GraphRep backend contract: dense ↔ sparse end-to-end parity.
+
+Same policy params + same graphs must yield identical solutions through
+every layer that dispatches on the backend — env steps (mvc AND maxcut),
+the unified Alg. 4 driver (d=1 and the adaptive §4.5.1 schedule, including
+identical commit counts), agent training, and the memory win the sparse
+representation exists for.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Agent, PolicyConfig, init_policy, random_graph_batch,
+                        solve, train_agent, DENSE, SPARSE, get_rep,
+                        rep_for_state, sparse_state_bytes)
+from repro.core import env as env_lib
+from repro.core.agent import greedy_action_state
+from repro.core.graphs import GraphState, SparseGraphState
+from repro.core.env import is_cover, is_cover_sparse
+
+
+def _params(k=8, seed=0):
+    return init_policy(jax.random.key(seed), PolicyConfig(embed_dim=k))
+
+
+def test_registry_and_dispatch():
+    assert get_rep("dense") is DENSE and get_rep("sparse") is SPARSE
+    assert get_rep(None) is DENSE and get_rep(SPARSE) is SPARSE
+    adj = random_graph_batch("er", 10, 1, seed=0, rho=0.3)
+    assert isinstance(DENSE.init_state(adj), GraphState)
+    st = SPARSE.init_state(adj)
+    assert isinstance(st, SparseGraphState)
+    assert rep_for_state(st) is SPARSE
+
+
+def test_init_state_parity():
+    adj = random_graph_batch("er", 15, 3, seed=1, rho=0.2)
+    sd = DENSE.init_state(adj)
+    ss = SPARSE.init_state(adj)
+    np.testing.assert_array_equal(np.asarray(sd.candidate),
+                                  np.asarray(ss.candidate))
+    np.testing.assert_array_equal(np.asarray(sd.solution),
+                                  np.asarray(ss.solution))
+
+
+@pytest.mark.parametrize("problem", ["mvc", "maxcut"])
+def test_env_step_parity(problem):
+    """Registered env steps accept both representations and agree on
+    (solution, candidate, reward, done) for identical action streams."""
+    adj = random_graph_batch("er", 14, 2, seed=2, rho=0.3)
+    step = env_lib.make(problem)
+    sd, ss = DENSE.init_state(adj), SPARSE.init_state(adj)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        cand = np.asarray(sd.candidate)
+        acts = np.array([rng.choice(np.nonzero(cand[i] > 0.5)[0])
+                         if (cand[i] > 0.5).any() else 0
+                         for i in range(cand.shape[0])])
+        sd, rd, dd = step(sd, jnp.asarray(acts))
+        ss, rs, ds = step(ss, jnp.asarray(acts))
+        np.testing.assert_allclose(np.asarray(rd), np.asarray(rs),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(ds))
+        np.testing.assert_array_equal(np.asarray(sd.solution),
+                                      np.asarray(ss.solution))
+        np.testing.assert_array_equal(np.asarray(sd.candidate),
+                                      np.asarray(ss.candidate))
+        if bool(np.asarray(dd).all()):
+            break
+
+
+@pytest.mark.parametrize("multi_node", [False, True])
+def test_solve_parity_and_commit_counts(multi_node):
+    """Alg. 4 (incl. the adaptive d∈{8,4,2,1} schedule): identical
+    solutions, eval counts and per-eval commit counts on both reps."""
+    adj = random_graph_batch("er", 24, 3, seed=3, rho=0.2)
+    params = _params()
+    rd = solve(params, adj, num_layers=2, multi_node=multi_node, rep="dense")
+    rs = solve(params, adj, num_layers=2, multi_node=multi_node, rep="sparse")
+    np.testing.assert_array_equal(rd.solution, rs.solution)
+    assert rd.policy_evals == rs.policy_evals
+    np.testing.assert_array_equal(rd.nodes_committed, rs.nodes_committed)
+    assert np.asarray(is_cover(jnp.asarray(adj),
+                               jnp.asarray(rs.solution))).all()
+
+
+def test_sparse_adaptive_solve_is_valid_cover_both_graph_kinds():
+    params = _params(seed=5)
+    for kind, kw in (("er", {"rho": 0.2}), ("ba", {"d": 3})):
+        adj = random_graph_batch(kind, 30, 2, seed=11, **kw)
+        res = solve(params, adj, num_layers=2, multi_node=True, rep="sparse")
+        assert np.asarray(is_cover(jnp.asarray(adj),
+                                   jnp.asarray(res.solution))).all()
+        st = SPARSE.init_state(adj)
+        assert np.asarray(is_cover_sparse(
+            st.neighbors, st.valid, jnp.asarray(res.solution))).all()
+
+
+@pytest.mark.parametrize("problem", ["mvc", "maxcut"])
+def test_greedy_rollout_parity(problem):
+    """Greedy policy rollouts through the env registry: identical solution
+    trajectories on both representations (mvc AND maxcut)."""
+    adj = random_graph_batch("er", 12, 2, seed=4, rho=0.3)
+    params = _params(seed=1)
+    step = env_lib.make(problem)
+    sd, ss = DENSE.init_state(adj), SPARSE.init_state(adj)
+    for _ in range(12):
+        ad, _ = greedy_action_state(params, sd, rep=DENSE, num_layers=2)
+        as_, _ = greedy_action_state(params, ss, rep=SPARSE, num_layers=2)
+        np.testing.assert_array_equal(np.asarray(ad), np.asarray(as_))
+        sd, _, dd = step(sd, ad)
+        ss, _, _ = step(ss, as_)
+        if bool(np.asarray(dd).all()):
+            break
+    np.testing.assert_array_equal(np.asarray(sd.solution),
+                                  np.asarray(ss.solution))
+
+
+def test_state_bytes_sparse_below_dense_on_er015():
+    """§5.2 acceptance: sparse state bytes < dense bytes on ER(ρ=0.15)."""
+    adj = random_graph_batch("er", 256, 2, seed=6, rho=0.15)
+    db = DENSE.state_bytes(DENSE.init_state(adj))
+    ss = SPARSE.init_state(adj)
+    sb = SPARSE.state_bytes(ss)
+    assert sb < db
+    assert sb == sparse_state_bytes(ss)
+
+
+def test_train_agent_on_sparse_rep_smoke():
+    """The full Alg. 5 loop (episodes, compressed replay, Tuples2Graphs,
+    GD iterations) runs end-to-end on the sparse backend — selected only
+    via the PolicyConfig.graph_rep flag, no per-call rep argument."""
+    n = 12
+    train = random_graph_batch("er", n, 4, seed=0, rho=0.3)
+    cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=8,
+                       replay_capacity=256, learning_rate=1e-3,
+                       graph_rep="sparse")
+    agent = Agent(cfg, num_nodes=n)
+    log = train_agent(agent, train, episodes=3, tau=1, max_steps=24, seed=0)
+    assert len(log.losses) > 0
+    assert np.isfinite(log.losses[-1])
+
+
+def test_config_flag_selects_rep():
+    from repro.core.graphrep import DenseRep, SparseRep
+    from repro.configs.base import GraphRepConfig, GRAPH_REPS
+    from repro.configs import papergraph
+    assert GRAPH_REPS["sparse"].rep == "sparse"
+    assert papergraph.CONFIG.graph_rep == "dense"
+    assert papergraph.CONFIG_SPARSE.graph_rep == "sparse"
+    assert isinstance(GraphRepConfig(rep="dense").make(), DenseRep)
+    sparse_rep = GraphRepConfig(rep="sparse", max_degree=7).make()
+    assert isinstance(sparse_rep, SparseRep) and sparse_rep.max_degree == 7
+    # 0 means "derive from the batch", not "zero neighbors"
+    assert GraphRepConfig(rep="sparse").make().max_degree is None
+
+
+def test_sparse_max_degree_refuses_silent_truncation():
+    from repro.core.graphs import sparse_batch_from_dense
+    adj = random_graph_batch("er", 16, 1, seed=0, rho=0.5)
+    with pytest.raises(ValueError, match="max degree"):
+        sparse_batch_from_dense(adj, max_degree=2)
+    # 0 / None derive the width instead of producing an empty topology
+    g0 = sparse_batch_from_dense(adj, max_degree=0)
+    assert g0.max_degree >= 1 and bool(np.asarray(g0.valid).any())

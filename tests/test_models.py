@@ -138,8 +138,8 @@ def test_moe_sharded_matches_dense(mode):
     x = jnp.asarray(np.random.default_rng(2).standard_normal(
         (2, 8, cfg.d_model)), jnp.float32)
     want, aux_want = moe_dense_apply(params, x, cfg=cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding.compat import auto_axis_types_kw
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **auto_axis_types_kw(2))
     got, aux = moe_sharded_apply(params, x, cfg=cfg, mesh=mesh, mode=mode,
                                  capacity_factor=64.0)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),

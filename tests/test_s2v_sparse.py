@@ -9,8 +9,8 @@ from repro.core import (PolicyConfig, init_policy, init_state,
                         policy_scores, random_graph_batch,
                         residual_adjacency, solve)
 from repro.core.s2v import embed_full
-from repro.core.s2v_sparse import (sparse_batch_from_dense, embed_sparse,
-                                   sparse_policy_scores, solve_sparse,
+from repro.core.graphs import sparse_batch_from_dense
+from repro.core.s2v_sparse import (embed_sparse, sparse_policy_scores,
                                    sparse_state_bytes)
 from repro.core.agent import candidate_mask
 from repro.core.env import is_cover
@@ -47,13 +47,16 @@ def test_sparse_scores_match_dense():
                                rtol=1e-4, atol=1e-5)
 
 
-def test_solve_sparse_matches_dense_solve():
+def test_solve_sparse_rep_matches_dense_solve():
+    """The unified Alg. 4 driver on rep="sparse" (which replaced the old
+    ``solve_sparse`` duplicate) == the dense path, d=1."""
     adj = random_graph_batch("er", 20, 2, seed=9, rho=0.25)
     params = init_policy(jax.random.key(9), PolicyConfig(embed_dim=8))
     dense = solve(params, adj, num_layers=2, multi_node=False)
-    sol, steps = solve_sparse(params, adj, num_layers=2)
-    np.testing.assert_array_equal(sol, dense.solution)
-    assert np.asarray(is_cover(jnp.asarray(adj), jnp.asarray(sol))).all()
+    sparse = solve(params, adj, num_layers=2, multi_node=False, rep="sparse")
+    np.testing.assert_array_equal(sparse.solution, dense.solution)
+    assert np.asarray(is_cover(jnp.asarray(adj),
+                               jnp.asarray(sparse.solution))).all()
 
 
 def test_sparse_memory_win_on_sparse_graphs():

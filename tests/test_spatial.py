@@ -40,6 +40,7 @@ _CHILD = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow      # subprocess + forced multi-device shard_map compile
 @pytest.mark.parametrize("p,n", [(2, 16), (4, 32), (8, 32)])
 def test_partitioned_scores_match_single_device(p, n):
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
