@@ -24,7 +24,7 @@ def main() -> None:
 
     from . import (learning_speed, multinode_selection, gd_iterations,
                    scaling, efficiency_model, kernel_bench,
-                   roofline_summary, sparse_vs_dense)
+                   roofline_summary, sparse_vs_dense, train_step_scaling)
     modules = {
         "learning_speed": learning_speed,
         "multinode_selection": multinode_selection,
@@ -34,6 +34,7 @@ def main() -> None:
         "kernel_bench": kernel_bench,
         "roofline_summary": roofline_summary,
         "sparse_vs_dense": sparse_vs_dense,
+        "train_step_scaling": train_step_scaling,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,0 +1,172 @@
+"""Training-engine scaling: host loop vs fused device-resident step.
+
+Measures wall time per RL training step (one act→step→remember→τ×GD cycle,
+paper Alg. 5) for the two engines of DESIGN.md §8 at τ ∈ {1, 4} and
+P ∈ {1, 2} spatial devices.  The host loop pays 3+τ host↔device round
+trips per step; the fused jitted step pays one — the gap is the point of
+the device-resident engine.  P=2 runs in a subprocess with
+``--xla_force_host_platform_device_count=2`` (same mechanism as the
+spatial equivalence tests); on this single-CPU container it measures
+collective/partitioning overhead, not real scaling.
+
+JSON → experiments/bench/train_step_scaling.json with per-config seconds
+per step and the fused-over-host speedup.
+
+  PYTHONPATH=src python -m benchmarks.train_step_scaling [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from .common import save
+
+TAUS = (1, 4)
+
+
+def _measure_engine(engine: str, tau: int, *, n: int, graphs: int,
+                    steps: int, warm: int, spatial: int = 0) -> float:
+    """Steady-state seconds per RL training step (warm replay, compiled).
+
+    Drives each engine's per-step primitive directly — the fused jitted
+    step with its single (loss, done) fetch, or the host
+    act/remember/train cycle — resetting the episode state on done, so
+    the timed region is exactly the recurring per-step work.
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import Agent, PolicyConfig, get_rep
+    from repro.core import env as env_lib
+    from repro.core.engine import engine_init, get_train_step
+    from repro.core.graphs import random_graph_batch
+
+    adj = random_graph_batch("er", n, graphs, seed=0, rho=0.2)
+    cfg = PolicyConfig(embed_dim=16, num_layers=2, minibatch=32,
+                       replay_capacity=4096, learning_rate=1e-3,
+                       eps_decay_steps=200, spatial=spatial)
+    agent = Agent(cfg, num_nodes=n)
+    rep = get_rep(cfg.graph_rep)
+    source = rep.prepare_dataset(adj)
+    step_fn = env_lib.make("mvc")
+    residual = env_lib.residual_semantics("mvc")
+    b = 2                                  # graphs stepped together
+    gi = np.arange(b) % graphs
+    gi_dev = jnp.asarray(gi, jnp.int32)
+    zeros = np.zeros((b, n), np.float32)
+
+    def reset():
+        return rep.state_from_tuples(source, gi, zeros, residual=residual)
+
+    state = reset()
+    if engine == "device":
+        fused = get_train_step(cfg, rep=rep, tau=tau,
+                               target_mode=agent.target_mode)
+        es = engine_init(cfg, agent.params, agent.opt, n, seed=0)
+
+        def one_step():
+            nonlocal es, state
+            es, state, _a, _r, done, loss = fused(es, state, source, gi_dev)
+            _loss, done = jax.device_get((loss, done))
+            if done.all():
+                state = reset()
+    else:
+        def one_step():
+            nonlocal state
+            action = agent.act(state, explore=True)
+            new_state, reward, done = step_fn(state, jnp.asarray(action))
+            agent.remember(gi, state, action, np.asarray(reward), new_state,
+                           np.asarray(done))
+            agent.train(source, tau=tau, residual=residual)
+            state = new_state
+            if bool(np.asarray(done).all()):
+                state = reset()
+
+    for _ in range(warm):                  # fill replay + compile
+        one_step()
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        one_step()
+    return (time.perf_counter() - t0) / steps
+
+
+def _measure_grid(n: int, graphs: int, steps: int, warm: int,
+                  spatial: int) -> dict:
+    out = {}
+    for tau in TAUS:
+        host = _measure_engine("host", tau, n=n, graphs=graphs, steps=steps,
+                               warm=warm, spatial=spatial)
+        fused = _measure_engine("device", tau, n=n, graphs=graphs,
+                                steps=steps, warm=warm, spatial=spatial)
+        out[f"tau{tau}"] = {"host_s_per_step": host,
+                            "fused_s_per_step": fused,
+                            "speedup": host / fused}
+    return out
+
+
+def run(quick: bool = False):
+    n, graphs = (24, 4) if quick else (48, 8)
+    steps, warm = (20, 36) if quick else (60, 40)
+
+    results = {"config": {"n": n, "graphs": graphs, "steps": steps,
+                          "minibatch": 32, "embed_dim": 16, "taus": TAUS,
+                          "quick": quick},
+               "p1": _measure_grid(n, graphs, steps, warm, spatial=0)}
+
+    # P=2 needs 2 XLA devices → subprocess with a forced host device count.
+    child_env = dict(os.environ, JAX_PLATFORMS="cpu",
+                     XLA_FLAGS="--xla_force_host_platform_device_count=2",
+                     PYTHONPATH=os.pathsep.join(
+                         ["src", os.environ.get("PYTHONPATH", "")]).rstrip(
+                             os.pathsep))
+    spec = json.dumps({"n": n, "graphs": graphs, "steps": steps,
+                       "warm": warm, "spatial": 2})
+    child = subprocess.run(
+        [sys.executable, "-m", "benchmarks.train_step_scaling",
+         "--child", spec],
+        capture_output=True, text=True, env=child_env, timeout=1200)
+    if child.returncode == 0:
+        results["p2"] = json.loads(child.stdout.strip().splitlines()[-1])
+    else:                                  # record, don't hide, P=2 failures
+        results["p2"] = {"error": child.stderr[-1000:]}
+
+    save("train_step_scaling", results)
+    rows = []
+    for pname in ("p1", "p2"):
+        grid = results[pname]
+        if "error" in grid:
+            rows.append((f"train_step_{pname}", float("nan"),
+                         "P=2 subprocess failed"))
+            continue
+        for tau in TAUS:
+            r = grid[f"tau{tau}"]
+            rows.append((
+                f"train_step_{pname}_tau{tau}",
+                r["fused_s_per_step"] * 1e6,
+                f"host {r['host_s_per_step']*1e3:.1f}ms/step fused "
+                f"{r['fused_s_per_step']*1e3:.1f}ms/step "
+                f"speedup {r['speedup']:.2f}x"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--child", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child:
+        spec = json.loads(args.child)
+        print(json.dumps(_measure_grid(spec["n"], spec["graphs"],
+                                       spec["steps"], spec["warm"],
+                                       spec["spatial"])))
+        return
+    for name, us, derived in run(quick=args.quick):
+        print(f'{name},{us:.1f},"{derived}"')
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,12 @@ def main():
     ap.add_argument("--rep", choices=["dense", "sparse"], default="dense",
                     help="GraphRep backend (DESIGN.md §1): sparse stores "
                          "O(N·maxdeg) padded edge lists instead of O(N²)")
+    ap.add_argument("--engine", choices=["device", "host"], default="device",
+                    help="training engine (DESIGN.md §8): 'device' fuses "
+                         "act→step→remember→τ×GD into one jitted call")
+    ap.add_argument("--spatial", type=int, default=0,
+                    help="P-way spatial sharding of the GD loss/grad "
+                         "(paper Alg. 5); 0 → single device")
     args = ap.parse_args()
 
     kw = {"er": {"rho": 0.15}, "ba": {"d": 4}, "social": {}}[args.kind]
@@ -42,7 +48,8 @@ def main():
 
     cfg = PolicyConfig(embed_dim=args.embed_dim, num_layers=2, minibatch=64,
                        replay_capacity=10_000, learning_rate=args.lr,
-                       eps_decay_steps=args.steps // 2, graph_rep=args.rep)
+                       eps_decay_steps=args.steps // 2, graph_rep=args.rep,
+                       engine=args.engine, spatial=args.spatial)
     agent = Agent(cfg, num_nodes=args.nodes)
 
     curve = []

@@ -140,13 +140,18 @@ class GraphRepConfig:
     """Graph-representation backend selection for the paper's RL workload
     (DESIGN.md §1).  ``rep`` picks the GraphRep the env/inference/training/
     spatial layers dispatch through — a config flag, not a code-path fork.
+    ``engine``/``spatial`` select the training engine the same way
+    (DESIGN.md §8): the fused device-resident step vs the host loop, and
+    the P-way spatial sharding of the GD loss/grad (paper Alg. 5).
     """
     rep: str = "dense"               # "dense" (B,N,N) | "sparse" (B,N,D)
     max_degree: int = 0              # sparse: 0 → derive from the graph batch
     spatial: int = 0                 # P-way node sharding, 0 → single device
+    engine: str = "device"           # training engine: "device" | "host"
 
     def __post_init__(self):
         assert self.rep in ("dense", "sparse"), self.rep
+        assert self.engine in ("device", "host"), self.engine
 
     def make(self):
         """Construct the GraphRep backend this config describes."""
@@ -154,6 +159,13 @@ class GraphRepConfig:
         if self.rep == "dense":
             return DENSE
         return SparseRep(max_degree=self.max_degree or None)
+
+    def apply(self, cfg):
+        """Stamp this selection onto a ``PolicyConfig`` (engine, spatial,
+        rep) so agent/training construction reads one source of truth."""
+        import dataclasses as _dc
+        return _dc.replace(cfg, graph_rep=self.rep, engine=self.engine,
+                           spatial=self.spatial)
 
 
 GRAPH_REPS = {

@@ -5,15 +5,16 @@ graphs — hyper-parameters of OpenGraphGym-MG §6.1.
 backend to distributed sparse storage (paper §4.1/§5.2, DESIGN.md §1) —
 same policy, same hyper-parameters, O(N·maxdeg) graph state.
 """
-import dataclasses
-
 from ..core.policy import PolicyConfig
 from .base import GRAPH_REPS
 
-CONFIG = PolicyConfig(embed_dim=32, num_layers=2, gamma=0.9,
-                      learning_rate=1e-5, replay_capacity=50_000,
-                      eps_start=0.9, eps_end=0.1, graph_rep="dense")
+_BASE = PolicyConfig(embed_dim=32, num_layers=2, gamma=0.9,
+                     learning_rate=1e-5, replay_capacity=50_000,
+                     eps_start=0.9, eps_end=0.1)
 
-CONFIG_SPARSE = dataclasses.replace(CONFIG, graph_rep="sparse")
+# GraphRepConfig.apply stamps backend + engine/spatial selection
+# (DESIGN.md §1/§8) onto the paper hyper-parameters.
+CONFIG = GRAPH_REPS["dense"].apply(_BASE)
+CONFIG_SPARSE = GRAPH_REPS["sparse"].apply(_BASE)
 
 GRAPH_REP = GRAPH_REPS[CONFIG.graph_rep]

@@ -20,10 +20,14 @@ from .s2v_sparse import (embed_sparse, embed_sparse_local,
                          sparse_policy_scores, sparse_state_bytes)
 from .qmodel import QParams, init_q, scores_local
 from .agent import Agent, candidate_mask
-from .replay import ReplayBuffer, tuples_to_graphs
+from .replay import (ReplayBuffer, DeviceReplay, device_replay_init,
+                     device_replay_push, device_replay_sample,
+                     device_replay_at, device_replay_from_host,
+                     tuples_to_graphs)
+from .engine import EngineState, engine_init, get_train_step, sync_to_agent
 from .inference import solve, adaptive_d, InferenceResult
 from .training import train_agent, evaluate_quality, TrainLog
 from .spatial import (make_graph_mesh, spatial_scores_fn,
-                      sparse_spatial_scores_fn, shard_graph_arrays,
-                      shard_sparse_arrays)
+                      sparse_spatial_scores_fn, spatial_train_minibatch_fn,
+                      shard_graph_arrays, shard_sparse_arrays)
 from . import env, solvers, analysis

@@ -43,12 +43,16 @@ def greedy_action_state(params: PolicyParams, state, *, rep: GraphRep,
     return jnp.argmax(s, axis=-1), s
 
 
-@functools.partial(jax.jit, static_argnames=("rep", "num_layers"))
-def max_q_state(params: PolicyParams, state, *, rep: GraphRep,
-                num_layers: int):
+def max_q_raw(params: PolicyParams, state, *, rep: GraphRep,
+              num_layers: int):
+    """max_v Q(s', v) with the no-candidate convention (0) — un-jitted so
+    the fused train step (``repro.core.engine``) can trace it inline."""
     s = rep.scores(params, state, num_layers=num_layers)
     has_cand = state.candidate.sum(-1) > 0
     return jnp.where(has_cand, s.max(-1), 0.0)
+
+
+max_q_state = functools.partial(jax.jit, static_argnames=("rep", "num_layers"))(max_q_raw)
 
 
 @functools.partial(jax.jit, static_argnames=("num_layers",))
@@ -65,11 +69,12 @@ def max_q(params: PolicyParams, adj, sol, cand, *, num_layers: int):
     return jnp.where(has_cand, s.max(-1), 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("rep", "num_layers"),
-                   donate_argnums=(0, 1))
-def _train_minibatch(params: PolicyParams, opt: AdamState, state,
-                     action, target, *, rep: GraphRep, num_layers: int,
-                     lr: float):
+def train_minibatch_raw(params: PolicyParams, opt: AdamState, state,
+                        action, target, *, rep: GraphRep, num_layers: int,
+                        lr: float):
+    """One GD iteration on a re-materialized minibatch (Alg. 5 lines 19-23).
+    Un-jitted building block shared by the host path (jitted below), the
+    fused train step's scan body and the spatial shard_map path."""
     def loss_fn(p):
         s = rep.scores(p, state, num_layers=num_layers, masked=False)
         qsa = jnp.take_along_axis(s, action[:, None], axis=-1)[:, 0]
@@ -78,6 +83,11 @@ def _train_minibatch(params: PolicyParams, opt: AdamState, state,
     loss, grads = jax.value_and_grad(loss_fn)(params)
     params, opt = adam_update(params, grads, opt, lr=lr)
     return params, opt, loss
+
+
+_train_minibatch = functools.partial(
+    jax.jit, static_argnames=("rep", "num_layers"),
+    donate_argnums=(0, 1))(train_minibatch_raw)
 
 
 @dataclasses.dataclass
@@ -100,6 +110,18 @@ class Agent:
         if self.replay is None:
             self.replay = ReplayBuffer(self.cfg.replay_capacity, self.num_nodes)
         self._rng = np.random.default_rng(0)
+        self._spatial_fn = None
+
+    def _spatial_minibatch(self):
+        """Cached P-way spatial GD step (paper Alg. 5 lockstep; DESIGN.md
+        §8) over ``cfg.spatial`` devices; dispatches on state type."""
+        if self._spatial_fn is None:
+            from .spatial import make_graph_mesh, spatial_train_minibatch_fn
+            mesh = make_graph_mesh(self.cfg.spatial)
+            self._spatial_fn = spatial_train_minibatch_fn(
+                mesh, num_layers=self.cfg.num_layers,
+                lr=self.cfg.learning_rate)
+        return self._spatial_fn
 
     # -- acting ------------------------------------------------------------
     def epsilon(self) -> float:
@@ -118,14 +140,12 @@ class Agent:
         if not explore:
             return greedy
         eps = self.epsilon()
-        cand = np.asarray(state.candidate)
-        out = greedy.copy()
-        for i in range(b):
-            if self._rng.random() < eps:
-                choices = np.nonzero(cand[i] > 0.5)[0]
-                if len(choices):
-                    out[i] = self._rng.choice(choices)
-        return out
+        cand = np.asarray(state.candidate) > 0.5
+        explore_row = (self._rng.random(b) < eps) & cand.any(-1)
+        # Batched masked random choice: the argmax of iid uniforms restricted
+        # to candidate slots is a uniform draw from each row's candidate set.
+        u = self._rng.random((b, n)) * cand
+        return np.where(explore_row, np.argmax(u, axis=-1), greedy)
 
     # -- remembering ---------------------------------------------------------
     def remember(self, graph_idx, prev_state, action,
@@ -177,11 +197,16 @@ class Agent:
                                   num_layers=self.cfg.num_layers)
                 tgt = rew + self.cfg.gamma * np.asarray(nxt) * (1.0 - done)
             st = rep.state_from_tuples(source, gi, sol, residual=residual)
-            self.params, self.opt, l = _train_minibatch(
-                self.params, self.opt, st,
-                jnp.asarray(act), jnp.asarray(tgt),
-                rep=rep, num_layers=self.cfg.num_layers,
-                lr=self.cfg.learning_rate)
+            if self.cfg.spatial:
+                self.params, self.opt, l = self._spatial_minibatch()(
+                    self.params, self.opt, st,
+                    jnp.asarray(act), jnp.asarray(tgt))
+            else:
+                self.params, self.opt, l = _train_minibatch(
+                    self.params, self.opt, st,
+                    jnp.asarray(act), jnp.asarray(tgt),
+                    rep=rep, num_layers=self.cfg.num_layers,
+                    lr=self.cfg.learning_rate)
             loss = float(l)
         self.step_count += 1
         return loss

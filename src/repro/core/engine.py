@@ -1,0 +1,195 @@
+"""Device-resident parallel training engine (paper Alg. 5 as ONE jitted step).
+
+The host training loop performs, per env step: an acting sync, a remember
+sync (plus a stored-target bootstrap), and a blocking ``float(loss)`` on
+every one of the τ GD iterations — 3+τ host↔device round-trips.  The fused
+step runs the whole cycle on device in a single jitted call (DESIGN.md §8):
+
+1. epsilon-greedy acting — ``jax.random`` Bernoulli over rows plus a masked
+   categorical draw from each row's candidate set (Alg. 1 lines 9-10),
+2. the env transition (functional, already on device),
+3. TD-target computation at insertion time (Alg. 5 line 12, ``stored``
+   mode) or deferred bootstrapping (``fresh`` mode, DESIGN.md §7),
+4. replay insertion into the functional :class:`~repro.core.replay.DeviceReplay`
+   ring buffer,
+5. a ``lax.scan`` over τ GD iterations (§4.5.2) whose body samples the
+   buffer, re-materializes states with Tuples2Graphs
+   (``GraphRep.state_from_tuples``, Alg. 5 line 21) and applies one Adam
+   update — optionally under the P-way spatial shard_map path
+   (``spatial_train_minibatch_fn``) with a gradient psum over the ``graph``
+   mesh axis (Alg. 5's P-GPU lockstep, collapsed to SPMD per DESIGN.md §2).
+
+Everything is representation-polymorphic: both GraphRep backends and both
+target modes flow through the same step.  ``train_agent`` drives episodes
+over this step with one host round-trip per env step (loss + done fetch).
+
+RNG schedule (a stable contract, relied on by the equivalence tests):
+``rng, k_eps, k_pick, k_train = split(rng, 4)`` per step; GD iteration t
+samples with ``split(k_train, tau)[t]`` via ``device_replay_sample``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import env as env_lib
+from .agent import max_q_raw, train_minibatch_raw
+from .graphrep import GraphRep, get_rep
+from .policy import PolicyConfig, PolicyParams
+from .qmodel import NEG_INF
+from .replay import (DeviceReplay, device_replay_init, device_replay_push,
+                     device_replay_sample)
+from ..optim import AdamState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Device-resident training carry: everything Alg. 5 mutates per step."""
+    params: PolicyParams
+    opt: AdamState
+    replay: DeviceReplay
+    rng: jax.Array             # jax PRNG key
+    step_count: jax.Array      # () int32 — drives the epsilon schedule
+
+
+def engine_init(cfg: PolicyConfig, params: PolicyParams, opt: AdamState,
+                num_nodes: int, *, seed: int = 0,
+                step_count: int = 0) -> EngineState:
+    return EngineState(
+        params=params, opt=opt,
+        replay=device_replay_init(cfg.replay_capacity, num_nodes),
+        rng=jax.random.key(seed),
+        step_count=jnp.asarray(step_count, jnp.int32),
+    )
+
+
+def sync_to_agent(agent, es: EngineState) -> None:
+    """Copy the carry's learned state back onto a host Agent (for eval and
+    for resuming).  Copies go through the host: the next fused step donates
+    the carry's buffers, and spatial runs leave arrays committed to the
+    training mesh, which would clash with single-device eval jits."""
+    pull = lambda x: jnp.asarray(np.asarray(x))
+    agent.params = jax.tree.map(pull, es.params)
+    agent.opt = jax.tree.map(pull, es.opt)
+    agent.step_count = int(es.step_count)
+
+
+def get_train_step(cfg: PolicyConfig, *,
+                   rep: Union[str, GraphRep, None] = None,
+                   problem: str = "mvc", tau: Optional[int] = None,
+                   target_mode: str = "fresh", explore: bool = True):
+    """Build (and cache) the fused jitted train step for a configuration.
+
+    Returns ``step(es, state, source, graph_idx) -> (es', state', action,
+    reward, done, loss)``.  ``source`` is the device-resident training
+    dataset in ``rep``'s layout; ``graph_idx`` the (B,) episode graph ids.
+    With ``cfg.spatial`` = P > 0 the GD loss/grad runs under shard_map on
+    the (B, N/P, ·) layout (N must divide by P) with a gradient psum over
+    the ``graph`` axis; acting and target bootstraps stay replicated.
+    """
+    rep = get_rep(rep if rep is not None else cfg.graph_rep)
+    tau = cfg.grad_iters if tau is None else tau
+    assert target_mode in ("fresh", "stored"), target_mode
+    return _build_train_step(cfg, rep, problem, tau, target_mode, explore)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
+                      tau: int, target_mode: str, explore: bool):
+    step_fn = env_lib.make(problem)
+    residual = env_lib.residual_semantics(problem)
+    num_layers, gamma = cfg.num_layers, cfg.gamma
+    minibatch, lr = cfg.minibatch, cfg.learning_rate
+    stored = target_mode == "stored"
+
+    if cfg.spatial:
+        from .spatial import make_graph_mesh, spatial_train_minibatch_fn
+        gd_step = spatial_train_minibatch_fn(
+            make_graph_mesh(cfg.spatial), num_layers=num_layers,
+            lr=lr, jit=False)
+    else:
+        gd_step = functools.partial(train_minibatch_raw, rep=rep,
+                                    num_layers=num_layers, lr=lr)
+
+    def _epsilon(step_count):
+        frac = jnp.minimum(1.0, step_count.astype(jnp.float32)
+                           / max(1, cfg.eps_decay_steps))
+        return cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def train_step(es: EngineState, state, source, graph_idx):
+        b = state.candidate.shape[0]
+        rng, k_eps, k_pick, k_train = jax.random.split(es.rng, 4)
+
+        # -- act (Alg. 1 lines 9-10) --------------------------------------
+        scores = rep.scores(es.params, state, num_layers=num_layers)
+        action = jnp.argmax(scores, axis=-1)
+        if explore:
+            logits = jnp.where(state.candidate > 0.5, 0.0, NEG_INF)
+            pick = jax.random.categorical(k_pick, logits, axis=-1)
+            roll = jax.random.uniform(k_eps, (b,)) < _epsilon(es.step_count)
+            has_cand = state.candidate.sum(-1) > 0
+            action = jnp.where(roll & has_cand, pick, action)
+
+        # -- env transition -----------------------------------------------
+        new_state, reward, done = step_fn(state, action)
+
+        # -- remember (Alg. 5 lines 11-13) --------------------------------
+        if stored:
+            nxt = max_q_raw(es.params, new_state, rep=rep,
+                            num_layers=num_layers)
+            target = reward + gamma * nxt * (1.0 - done.astype(jnp.float32))
+        else:
+            target = jnp.zeros_like(reward)
+        replay = device_replay_push(es.replay, graph_idx, state.solution,
+                                    action, target, reward,
+                                    new_state.solution, done)
+
+        # -- τ GD iterations (Alg. 5 lines 15-23, §4.5.2) ------------------
+        def do_train(carry):
+            params, opt = carry
+
+            def body(c, key):
+                params, opt = c
+                gi, sol, act, tgt, rew, sol2, dn = device_replay_sample(
+                    replay, key, minibatch)
+                if not stored:
+                    st2 = rep.state_from_tuples(source, gi, sol2,
+                                                residual=residual)
+                    nxt = max_q_raw(params, st2, rep=rep,
+                                    num_layers=num_layers)
+                    tgt = rew + gamma * nxt * (1.0 - dn)
+                st = rep.state_from_tuples(source, gi, sol,
+                                           residual=residual)
+                params, opt, loss = gd_step(params, opt, st, act, tgt)
+                return (params, opt), loss
+
+            (params, opt), losses = lax.scan(
+                body, (params, opt), jax.random.split(k_train, tau))
+            return params, opt, losses[-1]
+
+        def skip(carry):
+            params, opt = carry
+            return params, opt, jnp.float32(jnp.nan)
+
+        warm = replay.size >= minibatch
+        if tau > 0:
+            params, opt, loss = lax.cond(warm, do_train, skip,
+                                         (es.params, es.opt))
+        else:
+            params, opt, loss = skip((es.params, es.opt))
+
+        # step_count drives the epsilon schedule; like the host loop's
+        # Agent.train it only advances once the replay is warm.
+        es = EngineState(params=params, opt=opt, replay=replay, rng=rng,
+                         step_count=es.step_count + warm.astype(jnp.int32))
+        return es, new_state, action, reward, done, loss
+
+    return train_step

@@ -199,13 +199,15 @@ class SparseGraphState:
         return self.neighbors.shape[2]
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SparseGraphBatch:
     """Static topology for B graphs: neighbors (B, N, D) int32 padded with
     N (a sentinel; embeddings are padded with a zero column), valid
     (B, N, D) bool.  Used both as the batch topology inside
     ``SparseGraphState`` construction and as the training-dataset container
-    (G graphs indexed by the replay buffer's graph ids)."""
+    (G graphs indexed by the replay buffer's graph ids).  Registered as a
+    pytree so the fused train step can take it as its dataset operand."""
     neighbors: jax.Array
     valid: jax.Array
 

@@ -39,6 +39,10 @@ class PolicyConfig:
     minibatch: int = 64          # B tuples per GD iteration
     grad_iters: int = 1          # τ (paper §4.5.2)
     graph_rep: str = "dense"     # GraphRep backend: "dense" | "sparse"
+    # Training-engine selection (DESIGN.md §8), config-driven like graph_rep:
+    engine: str = "device"       # "device" (fused jitted step) | "host"
+    spatial: int = 0             # P-way node sharding of GD loss/grad
+                                 # (paper Alg. 5); 0 → single device
 
 
 def init_policy(key: jax.Array, cfg: PolicyConfig) -> PolicyParams:

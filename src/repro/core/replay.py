@@ -1,10 +1,22 @@
-"""Compressed experience replay buffer (paper §4.4, 'Optimization of Replay
+"""Compressed experience replay (paper §4.4, 'Optimization of Replay
 Buffer to Reduce Memory Cost').
 
 Each tuple stores only ``(graph index, partial-solution bitmask S, action v_t,
-target value)`` — never the adjacency matrix.  ``tuples_to_graphs``
-(Tuples2Graphs, Alg. 5 line 21) re-materializes the residual subgraph
-tensor from the original adjacency stack at training time.
+target value, reward, S', done)`` — never the adjacency matrix.
+``tuples_to_graphs`` (Tuples2Graphs, Alg. 5 line 21) re-materializes the
+residual subgraph tensor from the original adjacency stack at training time.
+
+Two interchangeable buffers hold the same tuple layout (DESIGN.md §8):
+
+- :class:`ReplayBuffer` — host-side numpy ring buffer, mutated in place.
+  Used by the host training loop (``Agent.remember``/``Agent.train``).
+- :class:`DeviceReplay` — functional jnp ring buffer registered as a pytree.
+  ``device_replay_push``/``device_replay_sample`` are pure, so the whole
+  remember→sample cycle runs inside the fused jitted train step
+  (``repro.core.engine``) with no host round-trip.
+
+Both expose ``sample_at(idx)`` gathers so a caller that controls the index
+stream (equivalence tests, deterministic replays) sees identical tuples.
 """
 from __future__ import annotations
 
@@ -12,6 +24,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from .graphs import residual_adjacency
@@ -52,22 +65,42 @@ class ReplayBuffer:
 
     def push_batch(self, graph_idx, solution, action, target,
                    reward=None, next_solution=None, done=None) -> None:
-        b = len(np.atleast_1d(graph_idx))
-        reward = np.zeros(b) if reward is None else np.atleast_1d(reward)
-        done = np.zeros(b, bool) if done is None else np.atleast_1d(done)
-        next_solution = (np.zeros((b, self.num_nodes))
-                         if next_solution is None
-                         else np.atleast_2d(next_solution))
-        for g, s, a, t, r, s2, d in zip(
-                np.atleast_1d(graph_idx), np.atleast_2d(solution),
-                np.atleast_1d(action), np.atleast_1d(target),
-                reward, next_solution, done):
-            self.push(int(g), s, int(a), float(t), float(r), s2, bool(d))
+        """Vectorized batch insert: one fancy-indexed assignment per field
+        with modular wraparound, equivalent to B sequential ``push`` calls
+        (numpy assigns duplicate indices last-writer-wins, matching the
+        sequential overwrite order when B exceeds the capacity)."""
+        gi = np.atleast_1d(np.asarray(graph_idx, np.int32))
+        b = len(gi)
+        idx = (self._ptr + np.arange(b)) % self.capacity
+        self.graph_idx[idx] = gi
+        self.solution[idx] = np.atleast_2d(np.asarray(solution)) > 0.5
+        self.action[idx] = np.atleast_1d(np.asarray(action, np.int32))
+        self.target[idx] = np.atleast_1d(np.asarray(target, np.float32))
+        if reward is not None:
+            self.reward[idx] = np.atleast_1d(np.asarray(reward, np.float32))
+        else:
+            self.reward[idx] = 0.0
+        if next_solution is not None:
+            self.next_solution[idx] = np.atleast_2d(
+                np.asarray(next_solution)) > 0.5
+        else:
+            self.next_solution[idx] = False
+        if done is not None:
+            self.done[idx] = np.atleast_1d(np.asarray(done)) > 0
+        else:
+            self.done[idx] = False
+        self._ptr = int((self._ptr + b) % self.capacity)
+        self.size = min(self.size + b, self.capacity)
 
     def sample(self, batch: int, rng: np.random.Generator):
         """Sample B tuples (with replacement once the buffer is warm).
         Returns (graph_idx, S, action, stored_target, reward, S', done)."""
         idx = rng.integers(0, self.size, size=batch)
+        return self.sample_at(idx)
+
+    def sample_at(self, idx: np.ndarray):
+        """Gather the tuples at explicit indices (same layout as sample)."""
+        idx = np.asarray(idx)
         return (self.graph_idx[idx], self.solution[idx].astype(np.float32),
                 self.action[idx], self.target[idx], self.reward[idx],
                 self.next_solution[idx].astype(np.float32), self.done[idx])
@@ -78,6 +111,115 @@ class ReplayBuffer:
                 self.action.nbytes + self.target.nbytes +
                 self.reward.nbytes + self.next_solution.nbytes +
                 self.done.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident functional replay (DESIGN.md §8): the same ring buffer as
+# jnp arrays.  All operations are pure — they return a NEW DeviceReplay — so
+# push and sample trace into jit/scan and the buffer never leaves the device.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceReplay:
+    """Functional ring buffer of compressed tuples.  ``size``/``ptr`` are
+    traced () int32 scalars so warmup and wraparound happen on device."""
+    graph_idx: jax.Array       # (R,)   int32
+    solution: jax.Array        # (R, N) bool
+    action: jax.Array          # (R,)   int32
+    target: jax.Array          # (R,)   float32
+    reward: jax.Array          # (R,)   float32
+    next_solution: jax.Array   # (R, N) bool
+    done: jax.Array            # (R,)   bool
+    size: jax.Array            # ()     int32
+    ptr: jax.Array             # ()     int32
+
+    @property
+    def capacity(self) -> int:
+        return self.graph_idx.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.solution.shape[1]
+
+    def nbytes(self) -> int:
+        """Storage of the tuple arrays (mirrors ReplayBuffer.nbytes)."""
+        return (self.graph_idx.size * 4 + self.solution.size +
+                self.action.size * 4 + self.target.size * 4 +
+                self.reward.size * 4 + self.next_solution.size +
+                self.done.size)
+
+
+def device_replay_init(capacity: int, num_nodes: int) -> DeviceReplay:
+    return DeviceReplay(
+        graph_idx=jnp.zeros((capacity,), jnp.int32),
+        solution=jnp.zeros((capacity, num_nodes), bool),
+        action=jnp.zeros((capacity,), jnp.int32),
+        target=jnp.zeros((capacity,), jnp.float32),
+        reward=jnp.zeros((capacity,), jnp.float32),
+        next_solution=jnp.zeros((capacity, num_nodes), bool),
+        done=jnp.zeros((capacity,), bool),
+        size=jnp.zeros((), jnp.int32),
+        ptr=jnp.zeros((), jnp.int32),
+    )
+
+
+def device_replay_from_host(rb: ReplayBuffer) -> DeviceReplay:
+    """Upload a host buffer's contents (parity tests, warm starts)."""
+    return DeviceReplay(
+        graph_idx=jnp.asarray(rb.graph_idx),
+        solution=jnp.asarray(rb.solution),
+        action=jnp.asarray(rb.action),
+        target=jnp.asarray(rb.target),
+        reward=jnp.asarray(rb.reward),
+        next_solution=jnp.asarray(rb.next_solution),
+        done=jnp.asarray(rb.done),
+        size=jnp.asarray(rb.size, jnp.int32),
+        ptr=jnp.asarray(rb._ptr, jnp.int32),
+    )
+
+
+def device_replay_push(rb: DeviceReplay, graph_idx, solution, action,
+                       target, reward, next_solution, done) -> DeviceReplay:
+    """Pure batch insert at the ring pointer (B consecutive modular slots).
+
+    Requires B ≤ capacity (scatter order for duplicate ring slots is
+    unspecified under XLA); every realistic replay has capacity ≫ B.
+    """
+    b = np.shape(graph_idx)[0]
+    cap = rb.capacity
+    assert b <= cap, f"batch {b} exceeds replay capacity {cap}"
+    idx = (rb.ptr + jnp.arange(b, dtype=jnp.int32)) % cap
+    return dataclasses.replace(
+        rb,
+        graph_idx=rb.graph_idx.at[idx].set(
+            jnp.asarray(graph_idx, jnp.int32)),
+        solution=rb.solution.at[idx].set(jnp.asarray(solution) > 0.5),
+        action=rb.action.at[idx].set(jnp.asarray(action, jnp.int32)),
+        target=rb.target.at[idx].set(jnp.asarray(target, jnp.float32)),
+        reward=rb.reward.at[idx].set(jnp.asarray(reward, jnp.float32)),
+        next_solution=rb.next_solution.at[idx].set(
+            jnp.asarray(next_solution) > 0.5),
+        done=rb.done.at[idx].set(jnp.asarray(done) > 0),
+        ptr=((rb.ptr + b) % cap).astype(jnp.int32),
+        size=jnp.minimum(rb.size + b, cap).astype(jnp.int32),
+    )
+
+
+def device_replay_at(rb: DeviceReplay, idx: jax.Array):
+    """Gather tuples at traced indices.  Same layout as
+    ``ReplayBuffer.sample_at`` with masks as float32 (jit arithmetic)."""
+    return (rb.graph_idx[idx], rb.solution[idx].astype(jnp.float32),
+            rb.action[idx], rb.target[idx], rb.reward[idx],
+            rb.next_solution[idx].astype(jnp.float32),
+            rb.done[idx].astype(jnp.float32))
+
+
+def device_replay_sample(rb: DeviceReplay, key: jax.Array, batch: int):
+    """Uniform sample of B tuples over the warm region [0, size) — the
+    device analogue of ``ReplayBuffer.sample`` (with replacement)."""
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(rb.size, 1))
+    return device_replay_at(rb, idx)
 
 
 def tuples_to_graphs(adj_stack: jnp.ndarray, graph_idx: np.ndarray,

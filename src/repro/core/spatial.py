@@ -103,6 +103,111 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
     return scorer
 
 
+def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
+                               num_layers: int, lr: float, jit: bool = True):
+    """Build the P-way spatial GD step (paper Alg. 5's per-GPU gradient
+    descent + MPI_All_reduce of gradients, collapsed to SPMD; DESIGN.md §8).
+
+    Returns ``fn(params, opt, state, action, target) -> (params, opt,
+    loss)`` — a drop-in for the single-device ``_train_minibatch``: the TD
+    loss/grad of the minibatch runs under ``shard_map`` on the (B, N/P, ·)
+    node-sharded layout.  Each device owns the squared-error terms of the
+    tuples whose action node resides in its row block, evaluates them from
+    spatially-partitioned policy scores (per-layer collectives as in the
+    inference path), and the gradients are ``lax.psum``-ed over the
+    ``graph`` axis before one replicated Adam update.  Dispatches on the
+    state's representation (dense ``GraphState`` / ``SparseGraphState``)
+    and its ``residual`` semantics.  N must be divisible by P.
+    """
+    from functools import partial
+    from ..optim import adam_update
+    from ..sharding.compat import shard_map_nocheck
+    from .graphs import SparseGraphState
+
+    def _ownership_loss(s_l, action, target, my, nl):
+        """Mean squared TD error restricted to locally-owned actions."""
+        loc = action - my * nl
+        owned = (loc >= 0) & (loc < nl)
+        qsa = jnp.take_along_axis(
+            s_l, jnp.clip(loc, 0, nl - 1)[:, None], axis=-1)[:, 0]
+        sq = jnp.where(owned, jnp.square(qsa - target), 0.0)
+        return sq.sum() / action.shape[0]
+
+    def _build_dense():
+        @partial(shard_map_nocheck, mesh=mesh,
+                 in_specs=(P(), P(None, AXIS, None), P(None, AXIS),
+                           P(None, AXIS), P(), P()),
+                 out_specs=(P(), P()))
+        def grad_fn(params, adj_l, sol_l, cand_l, action, target):
+            nl = adj_l.shape[1]
+            my = lax.axis_index(AXIS)
+
+            def loss_fn(p):
+                s_l = policy_scores(p, adj_l, sol_l, cand_l,
+                                    num_layers=num_layers, axis=AXIS,
+                                    masked=False)
+                return _ownership_loss(s_l, action, target, my, nl)
+
+            loss_l, grads_l = jax.value_and_grad(loss_fn)(params)
+            # Alg. 5: MPI_All_reduce of the (4K²+4K)-parameter gradient.
+            grads = jax.tree.map(lambda g: lax.psum(g, AXIS), grads_l)
+            return lax.psum(loss_l, AXIS), grads
+
+        return grad_fn
+
+    def _build_sparse(residual: bool):
+        @partial(shard_map_nocheck, mesh=mesh,
+                 in_specs=(P(), P(None, AXIS, None), P(None, AXIS, None),
+                           P(None, AXIS), P(None, AXIS), P(), P()),
+                 out_specs=(P(), P()))
+        def grad_fn(params, nbr_l, val_l, sol_l, cand_l, action, target):
+            nl = nbr_l.shape[1]
+            my = lax.axis_index(AXIS)
+
+            def loss_fn(p):
+                if residual:
+                    sol_full = lax.all_gather(sol_l, AXIS, axis=1, tiled=True)
+                    keep_full = jnp.pad(1.0 - sol_full, ((0, 0), (0, 1)))
+                    keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_full,
+                                                               nbr_l)
+                    edge_l = (val_l.astype(jnp.float32) * keep_nbr *
+                              (1.0 - sol_l)[:, :, None])
+                else:
+                    edge_l = val_l.astype(jnp.float32)
+                emb_l = embed_sparse_local(p.em, nbr_l, edge_l, sol_l,
+                                           num_layers=num_layers, axis=AXIS)
+                s_l = scores_local(p.q, emb_l, cand_l, axis=AXIS,
+                                   masked=False)
+                return _ownership_loss(s_l, action, target, my, nl)
+
+            loss_l, grads_l = jax.value_and_grad(loss_fn)(params)
+            grads = jax.tree.map(lambda g: lax.psum(g, AXIS), grads_l)
+            return lax.psum(loss_l, AXIS), grads
+
+        return grad_fn
+
+    built = {}
+
+    def fn(params, opt, state, action, target):
+        if isinstance(state, SparseGraphState):
+            key = ("sparse", state.residual)
+            if key not in built:
+                built[key] = _build_sparse(state.residual)
+            loss, grads = built[key](params, state.neighbors, state.valid,
+                                     state.solution, state.candidate,
+                                     action, target)
+        else:
+            key = ("dense",)
+            if key not in built:
+                built[key] = _build_dense()
+            loss, grads = built[key](params, state.adj, state.solution,
+                                     state.candidate, action, target)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    return jax.jit(fn) if jit else fn
+
+
 def shard_graph_arrays(mesh, adj, sol, cand):
     """Place (B,N,N)/(B,N)/(B,N) arrays with the paper's row partitioning."""
     ns = jax.sharding.NamedSharding

@@ -19,6 +19,7 @@ import time
 from typing import Callable, List, Optional, Union
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import env as env_lib
@@ -63,7 +64,23 @@ def train_agent(
     eval_fn: Optional[Callable[[Agent], float]] = None,
     max_steps: Optional[int] = None,  # global RL-training-step budget
     seed: int = 0,
+    engine: Optional[str] = None,     # None → agent.cfg.engine
 ) -> TrainLog:
+    """Episode driver over either training engine (DESIGN.md §8).
+
+    ``engine="device"`` (the default via ``PolicyConfig.engine``) drives the
+    fused jitted train step of ``repro.core.engine``: the whole
+    act→step→remember→τ×GD cycle is one device call per env step, replay
+    lives on device (``agent.replay`` stays untouched), and the only host
+    traffic per step is the (loss, done) fetch.  ``engine="host"`` is the
+    legacy loop over ``Agent.act``/``remember``/``train`` — same algorithm,
+    3+τ host↔device round-trips per step — kept as the numpy-replay
+    fallback and as the reference for the equivalence tests.
+    """
+    engine = engine if engine is not None else getattr(agent.cfg, "engine",
+                                                       "host")
+    if engine not in ("host", "device"):
+        raise ValueError(f"unknown training engine {engine!r}")
     rng = np.random.default_rng(seed)
     rep = get_rep(rep if rep is not None else agent.cfg.graph_rep)
     step_fn = env_lib.make(problem)
@@ -76,27 +93,44 @@ def train_agent(
     t0 = time.time()
     total_steps = 0
 
+    if engine == "device":
+        from .engine import engine_init, get_train_step, sync_to_agent
+        fused = get_train_step(agent.cfg, rep=rep, problem=problem, tau=tau,
+                               target_mode=agent.target_mode)
+        es = engine_init(agent.cfg, agent.params, agent.opt, n, seed=seed,
+                         step_count=agent.step_count)
+
     for _ep in range(episodes):
         # Alg. 5 line 4: random training graph(s), same across all devices.
         gi = rng.integers(0, g_count, size=batch_graphs)
         state = rep.state_from_tuples(
             source, gi, np.zeros((batch_graphs, n), np.float32),
             residual=residual)
+        gi_dev = jnp.asarray(gi, jnp.int32)
         ep_len = 0
         for _t in range(n):
             if max_steps is not None and total_steps >= max_steps:
                 break
-            action = agent.act(state, explore=True)
-            new_state, reward, done = step_fn(state, jnp.asarray(action))
-            agent.remember(gi, state, action, np.asarray(reward), new_state,
-                           np.asarray(done))
-            loss = agent.train(source, tau=tau, residual=residual)
-            state = new_state
+            if engine == "device":
+                es, state, _act, _rew, done, loss_d = fused(
+                    es, state, source, gi_dev)
+                # the step's single host↔device round-trip
+                loss, done = jax.device_get((loss_d, done))
+                loss = float(loss)
+            else:
+                action = agent.act(state, explore=True)
+                new_state, reward, done = step_fn(state, jnp.asarray(action))
+                agent.remember(gi, state, action, np.asarray(reward),
+                               new_state, np.asarray(done))
+                loss = agent.train(source, tau=tau, residual=residual)
+                state = new_state
             ep_len += 1
             total_steps += 1
             log.steps.append(total_steps)
             log.losses.append(loss)
             if eval_fn is not None and total_steps % eval_every == 0:
+                if engine == "device":
+                    sync_to_agent(agent, es)
                 log.eval_steps.append(total_steps)
                 log.approx_ratios.append(eval_fn(agent))
             if bool(np.asarray(done).all()):
@@ -104,5 +138,7 @@ def train_agent(
         log.episode_lengths.append(ep_len)
         if max_steps is not None and total_steps >= max_steps:
             break
+    if engine == "device":
+        sync_to_agent(agent, es)
     log.wall_time = time.time() - t0
     return log

@@ -1,0 +1,322 @@
+"""Device-resident training engine (DESIGN.md §8).
+
+Covers: host↔device replay parity (push wraparound + gather), the
+vectorized host push_batch/act satellites, fused-train-step ↔ host-loop
+equivalence (stored-target mode, both GraphRep backends), fresh-mode
+training through the fused step, the spatial GD path at P=1 in-process and
+P=2 in a forced-multi-device subprocess.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Agent, PolicyConfig, ReplayBuffer, DeviceReplay,
+                        device_replay_init, device_replay_push,
+                        device_replay_at, device_replay_from_host,
+                        engine_init, get_train_step, get_rep,
+                        make_graph_mesh, spatial_train_minibatch_fn,
+                        random_graph_batch, train_agent, DENSE, SPARSE)
+from repro.core import env as env_lib
+from repro.core.agent import _train_minibatch
+from repro.optim import adam_init
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tuples(b, n, seed=0, base=0):
+    rng = np.random.default_rng(seed)
+    return dict(
+        graph_idx=rng.integers(0, 5, size=b).astype(np.int32),
+        solution=(rng.random((b, n)) < 0.3).astype(np.float32),
+        action=rng.integers(0, n, size=b).astype(np.int32),
+        target=rng.standard_normal(b).astype(np.float32) + base,
+        reward=-np.ones(b, np.float32),
+        next_solution=(rng.random((b, n)) < 0.5).astype(np.float32),
+        done=rng.random(b) < 0.2,
+    )
+
+
+# -- replay parity ----------------------------------------------------------
+
+def test_device_replay_push_parity_with_wraparound():
+    cap, n, b = 10, 6, 3
+    host = ReplayBuffer(cap, n)
+    dev = device_replay_init(cap, n)
+    for i in range(5):                     # 15 tuples through a 10-ring
+        t = _tuples(b, n, seed=i, base=i)
+        host.push_batch(**t)
+        dev = device_replay_push(dev, t["graph_idx"], t["solution"],
+                                 t["action"], t["target"], t["reward"],
+                                 t["next_solution"], t["done"])
+    assert int(dev.size) == host.size == cap
+    assert int(dev.ptr) == host._ptr
+    for f in ("graph_idx", "solution", "action", "target", "reward",
+              "next_solution", "done"):
+        np.testing.assert_array_equal(np.asarray(getattr(dev, f)),
+                                      getattr(host, f), err_msg=f)
+
+
+def test_device_replay_sample_at_parity():
+    cap, n = 16, 5
+    host = ReplayBuffer(cap, n)
+    host.push_batch(**_tuples(12, n, seed=3))
+    dev = device_replay_from_host(host)
+    idx = np.array([0, 3, 3, 11, 7])
+    h = host.sample_at(idx)
+    d = device_replay_at(dev, jnp.asarray(idx))
+    for a, b, name in zip(h, d, "gi sol act tgt rew sol2 done".split()):
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(a, np.float32), err_msg=name)
+    assert host.nbytes() == dev.nbytes()
+
+
+def test_push_batch_matches_sequential_push():
+    cap, n, b = 7, 4, 5
+    seq, vec = ReplayBuffer(cap, n), ReplayBuffer(cap, n)
+    for i in range(3):                     # crosses the ring boundary twice
+        t = _tuples(b, n, seed=10 + i)
+        for j in range(b):
+            seq.push(int(t["graph_idx"][j]), t["solution"][j],
+                     int(t["action"][j]), float(t["target"][j]),
+                     float(t["reward"][j]), t["next_solution"][j],
+                     bool(t["done"][j]))
+        vec.push_batch(**t)
+    assert (seq.size, seq._ptr) == (vec.size, vec._ptr)
+    for f in ("graph_idx", "solution", "action", "target", "reward",
+              "next_solution", "done"):
+        np.testing.assert_array_equal(getattr(seq, f), getattr(vec, f),
+                                      err_msg=f)
+
+
+# -- vectorized epsilon-greedy acting ---------------------------------------
+
+def test_act_vectorized_explores_candidates_only():
+    n = 12
+    adj = random_graph_batch("er", n, 4, seed=1, rho=0.3)
+    cfg = PolicyConfig(embed_dim=8, eps_start=1.0, eps_end=1.0)
+    agent = Agent(cfg, num_nodes=n)
+    state = DENSE.init_state(jnp.asarray(adj))
+    cand = np.asarray(state.candidate)
+    seen_nongreedy = False
+    greedy = agent.act(state, explore=False)
+    for _ in range(10):                    # eps=1 → always explores
+        acts = agent.act(state, explore=True)
+        assert all(cand[i, a] > 0.5 for i, a in enumerate(acts))
+        seen_nongreedy |= (acts != greedy).any()
+    assert seen_nongreedy
+
+
+def test_act_eps_zero_is_greedy():
+    n = 10
+    adj = random_graph_batch("er", n, 3, seed=2, rho=0.3)
+    cfg = PolicyConfig(embed_dim=8, eps_start=0.0, eps_end=0.0)
+    agent = Agent(cfg, num_nodes=n)
+    state = DENSE.init_state(jnp.asarray(adj))
+    np.testing.assert_array_equal(agent.act(state, explore=True),
+                                  agent.act(state, explore=False))
+
+
+# -- fused train step ↔ host loop equivalence --------------------------------
+
+@pytest.mark.parametrize("rep_name", ["dense", "sparse"])
+def test_fused_step_matches_host_loop_stored_mode(rep_name):
+    """The fused jitted step must reproduce the host loop's losses AND
+    params exactly (same tuples, same RNG schedule, eps=0 greedy acting,
+    stored targets = paper Alg. 5 line 12)."""
+    n, b, mb, tau, steps = 14, 2, 8, 2, 8
+    rep = get_rep(rep_name)
+    adj = random_graph_batch("er", n, 4, seed=0, rho=0.3)
+    cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=mb,
+                       replay_capacity=64, learning_rate=1e-3,
+                       eps_start=0.0, eps_end=0.0, graph_rep=rep_name)
+    source = rep.prepare_dataset(adj)
+    gi = np.array([0, 2])
+    residual = env_lib.residual_semantics("mvc")
+    step_fn = env_lib.make("mvc")
+    zero = np.zeros((b, n), np.float32)
+
+    # fused engine (explore draws happen but eps=0 keeps actions greedy)
+    agent_d = Agent(cfg, num_nodes=n, target_mode="stored")
+    fused = get_train_step(cfg, rep=rep, tau=tau, target_mode="stored")
+    es = engine_init(cfg, agent_d.params, agent_d.opt, n, seed=0)
+    state = rep.state_from_tuples(source, gi, zero, residual=residual)
+    fused_losses = []
+    for _ in range(steps):
+        es, state, _a, _r, _d, l = fused(es, state, source,
+                                         jnp.asarray(gi, jnp.int32))
+        fused_losses.append(float(l))
+
+    # host loop, engine RNG schedule (see repro.core.engine docstring)
+    agent_h = Agent(cfg, num_nodes=n, target_mode="stored")
+    key = jax.random.key(0)
+    state = rep.state_from_tuples(source, gi, zero, residual=residual)
+    host_losses = []
+    for _ in range(steps):
+        key, _k_eps, _k_pick, k_train = jax.random.split(key, 4)
+        action = agent_h.act(state, explore=False)
+        new_state, reward, done = step_fn(state, jnp.asarray(action))
+        agent_h.remember(gi, state, action, np.asarray(reward), new_state,
+                         np.asarray(done))
+        loss = float("nan")
+        if agent_h.replay.size >= mb:
+            for k in jax.random.split(k_train, tau):
+                idx = np.asarray(jax.random.randint(
+                    k, (mb,), 0, max(agent_h.replay.size, 1)))
+                gi_b, sol, act, tgt, _rew, _s2, _dn = \
+                    agent_h.replay.sample_at(idx)
+                st = rep.state_from_tuples(source, gi_b, sol,
+                                           residual=residual)
+                agent_h.params, agent_h.opt, l = _train_minibatch(
+                    agent_h.params, agent_h.opt, st, jnp.asarray(act),
+                    jnp.asarray(tgt), rep=rep, num_layers=cfg.num_layers,
+                    lr=cfg.learning_rate)
+                loss = float(l)
+        host_losses.append(loss)
+        state = new_state
+
+    fl, hl = np.asarray(fused_losses), np.asarray(host_losses)
+    warm = np.isfinite(hl)
+    np.testing.assert_array_equal(np.isfinite(fl), warm)
+    assert warm.any()
+    np.testing.assert_allclose(fl[warm], hl[warm], rtol=1e-5, atol=1e-6)
+    for a, b_ in zip(jax.tree.leaves(es.params),
+                     jax.tree.leaves(agent_h.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("rep_name", ["dense", "sparse"])
+def test_fused_step_fresh_mode_trains(rep_name):
+    n = 12
+    adj = random_graph_batch("er", n, 4, seed=5, rho=0.3)
+    cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=8,
+                       replay_capacity=128, learning_rate=1e-3,
+                       graph_rep=rep_name)
+    agent = Agent(cfg, num_nodes=n)
+    before = jax.tree.map(np.asarray, agent.params)
+    log = train_agent(agent, adj, episodes=4, tau=2, eval_every=10 ** 9,
+                      seed=0, engine="device")
+    assert np.isfinite(log.losses[-1])
+    assert any(not np.array_equal(np.asarray(a), b) for a, b in
+               zip(jax.tree.leaves(agent.params), jax.tree.leaves(before)))
+    # the agent's host replay is untouched by design: replay lives on device
+    assert agent.replay.size == 0
+
+
+def test_train_agent_host_and_device_engines_both_learn():
+    n = 12
+    adj = random_graph_batch("er", n, 4, seed=6, rho=0.3)
+    for engine in ("host", "device"):
+        cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=8,
+                           replay_capacity=128, learning_rate=1e-3)
+        agent = Agent(cfg, num_nodes=n)
+        log = train_agent(agent, adj, episodes=3, tau=1,
+                          eval_every=10 ** 9, seed=0, engine=engine)
+        assert np.isfinite(log.losses[-1]), engine
+        # both engines advance the epsilon schedule only on warm steps
+        assert agent.step_count == int(np.isfinite(log.losses).sum())
+
+
+# -- spatial GD path ---------------------------------------------------------
+
+@pytest.mark.parametrize("rep_name", ["dense", "sparse"])
+def test_spatial_minibatch_p1_matches_plain(rep_name):
+    """shard_map spatial GD on a 1-device mesh must equal _train_minibatch
+    bit-for-bit (the P>1 case runs in the slow subprocess test below)."""
+    n, b = 16, 8
+    rep = get_rep(rep_name)
+    adj = random_graph_batch("er", n, 4, seed=0, rho=0.3)
+    from repro.core import init_policy
+    params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=8))
+    rng = np.random.default_rng(0)
+    gi = rng.integers(0, 4, size=b)
+    sol = (rng.random((b, n)) < 0.2).astype(np.float32)
+    act = jnp.asarray(rng.integers(0, n, size=b).astype(np.int32))
+    tgt = jnp.asarray(rng.standard_normal(b).astype(np.float32))
+    source = rep.prepare_dataset(adj)
+    st = rep.state_from_tuples(source, gi, sol)
+    p1, _o, l1 = _train_minibatch(jax.tree.map(jnp.copy, params),
+                                  adam_init(params), st, act, tgt,
+                                  rep=rep, num_layers=2, lr=1e-3)
+    fn = spatial_train_minibatch_fn(make_graph_mesh(1), num_layers=2,
+                                    lr=1e-3)
+    p2, _o, l2 = fn(jax.tree.map(jnp.copy, params), adam_init(params),
+                    st, act, tgt)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)
+    for a, b_ in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-7)
+
+
+_SPATIAL_CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json, numpy as np, jax, jax.numpy as jnp
+    from repro.core import (Agent, PolicyConfig, train_agent, init_policy,
+                            random_graph_batch, make_graph_mesh,
+                            spatial_train_minibatch_fn, get_rep)
+    from repro.core.agent import _train_minibatch
+    from repro.optim import adam_init
+
+    n, b = 16, 8
+    adj = random_graph_batch("er", n, 4, seed=0, rho=0.3)
+    out = {}
+    for rep_name in ("dense", "sparse"):
+        rep = get_rep(rep_name)
+        # (a) one spatial GD step at P=2 vs the plain minibatch step
+        params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=8))
+        rng = np.random.default_rng(0)
+        gi = rng.integers(0, 4, size=b)
+        sol = (rng.random((b, n)) < 0.2).astype(np.float32)
+        act = jnp.asarray(rng.integers(0, n, size=b).astype(np.int32))
+        tgt = jnp.asarray(rng.standard_normal(b).astype(np.float32))
+        st = rep.state_from_tuples(rep.prepare_dataset(adj), gi, sol)
+        p1, _o, l1 = _train_minibatch(jax.tree.map(jnp.copy, params),
+                                      adam_init(params), st, act, tgt,
+                                      rep=rep, num_layers=2, lr=1e-3)
+        fn = spatial_train_minibatch_fn(make_graph_mesh(2), num_layers=2,
+                                        lr=1e-3)
+        p2, _o, l2 = fn(jax.tree.map(jnp.copy, params), adam_init(params),
+                        st, act, tgt)
+        step_maxdiff = max(float(np.abs(np.asarray(a) - np.asarray(c)).max())
+                           for a, c in zip(jax.tree.leaves(p1),
+                                           jax.tree.leaves(p2)))
+        # (b) full fused-engine training at P=1 vs P=2
+        ps = {}
+        for p in (1, 2):
+            cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=8,
+                               replay_capacity=256, learning_rate=1e-3,
+                               graph_rep=rep_name, spatial=p)
+            agent = Agent(cfg, num_nodes=n)
+            train_agent(agent, adj, episodes=4, tau=2, eval_every=10 ** 9,
+                        seed=0, engine="device")
+            ps[p] = jax.tree.map(np.asarray, agent.params)
+        train_maxdiff = max(float(np.abs(a - c).max())
+                            for a, c in zip(jax.tree.leaves(ps[1]),
+                                            jax.tree.leaves(ps[2])))
+        out[rep_name] = {"loss_diff": abs(float(l1) - float(l2)),
+                         "step_maxdiff": step_maxdiff,
+                         "train_maxdiff": train_maxdiff}
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow      # subprocess + forced 2-device shard_map compiles
+def test_spatial_training_consistent_across_p():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", _SPATIAL_CHILD],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for rep_name, r in res.items():
+        assert r["loss_diff"] < 1e-5, (rep_name, r)
+        assert r["step_maxdiff"] < 1e-6, (rep_name, r)
+        assert r["train_maxdiff"] < 1e-5, (rep_name, r)
