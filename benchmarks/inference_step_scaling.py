@@ -1,0 +1,89 @@
+"""Inference-engine scaling: host-driven Alg. 4 loop vs fused solve.
+
+Measures wall time per policy evaluation for the two inference engines of
+DESIGN.md §9 on both GraphRep backends.  The host loop pays a blocking
+``done`` fetch after EVERY policy evaluation (the paper's driver); the
+fused solve runs the whole score → top-d commit → done-check loop as one
+jitted ``lax.while_loop`` with a single host↔device sync per solve — the
+gap is the per-eval round-trip cost the device-resident engine removes
+(the paper's Alg. 4 headline: 23.8s → 3.4s per step on 1 → 6 GPUs relies
+on exactly this loop staying on-device).
+
+JSON → experiments/bench/inference_step_scaling.json with per-config
+seconds per policy eval and the fused-over-host speedup.
+
+  PYTHONPATH=src python -m benchmarks.inference_step_scaling [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import save
+
+REPS = ("dense", "sparse")
+
+
+def _measure_solve(engine: str, rep: str, *, n: int, batch: int,
+                   repeats: int, multi_node: bool) -> dict:
+    """Steady-state seconds per policy evaluation (compiled, warm)."""
+    import jax
+    from repro.core import PolicyConfig, init_policy, solve
+    from repro.core.graphs import random_graph_batch
+
+    adj = random_graph_batch("er", n, batch, seed=0, rho=0.15)
+    params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=16))
+    kw = dict(num_layers=2, multi_node=multi_node, rep=rep, engine=engine)
+    res = solve(params, adj, **kw)          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = solve(params, adj, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return {"s_per_solve": dt, "policy_evals": res.policy_evals,
+            "s_per_eval": dt / res.policy_evals}
+
+
+def _measure_grid(n: int, batch: int, repeats: int) -> dict:
+    out = {}
+    for rep in REPS:
+        for mn in (False, True):
+            host = _measure_solve("host", rep, n=n, batch=batch,
+                                  repeats=repeats, multi_node=mn)
+            fused = _measure_solve("device", rep, n=n, batch=batch,
+                                   repeats=repeats, multi_node=mn)
+            out[f"{rep}_{'adaptive' if mn else 'd1'}"] = {
+                "host": host, "fused": fused,
+                "speedup_per_eval": host["s_per_eval"] / fused["s_per_eval"],
+            }
+    return out
+
+
+def run(quick: bool = False):
+    n, batch = (24, 4) if quick else (64, 8)
+    repeats = 3 if quick else 6
+    results = {"config": {"n": n, "batch": batch, "repeats": repeats,
+                          "embed_dim": 16, "quick": quick},
+               "p1": _measure_grid(n, batch, repeats)}
+    save("inference_step_scaling", results)
+    rows = []
+    for name, r in results["p1"].items():
+        rows.append((
+            f"solve_{name}",
+            r["fused"]["s_per_eval"] * 1e6,
+            f"host {r['host']['s_per_eval']*1e3:.2f}ms/eval fused "
+            f"{r['fused']['s_per_eval']*1e3:.2f}ms/eval "
+            f"({r['fused']['policy_evals']} evals) "
+            f"speedup {r['speedup_per_eval']:.2f}x"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick):
+        print(f'{name},{us:.1f},"{derived}"')
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
   Fig 8  gd_iterations        Fig 9/10/11  scaling
   §5     efficiency_model     kernels  kernel_bench
   §5.2   sparse_vs_dense (GraphRep backend memory/latency)
+  §8/§9  train_step_scaling / inference_step_scaling (fused engines)
 """
 from __future__ import annotations
 
@@ -24,7 +25,8 @@ def main() -> None:
 
     from . import (learning_speed, multinode_selection, gd_iterations,
                    scaling, efficiency_model, kernel_bench,
-                   roofline_summary, sparse_vs_dense, train_step_scaling)
+                   roofline_summary, sparse_vs_dense, train_step_scaling,
+                   inference_step_scaling)
     modules = {
         "learning_speed": learning_speed,
         "multinode_selection": multinode_selection,
@@ -35,6 +37,7 @@ def main() -> None:
         "roofline_summary": roofline_summary,
         "sparse_vs_dense": sparse_vs_dense,
         "train_step_scaling": train_step_scaling,
+        "inference_step_scaling": inference_step_scaling,
     }
     if args.only:
         keep = set(args.only.split(","))

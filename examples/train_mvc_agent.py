@@ -14,7 +14,7 @@ import numpy as np
 from repro.core import (Agent, PolicyConfig, train_agent, evaluate_quality,
                         solve)
 from repro.core.graphs import random_graph_batch
-from repro.core.solvers import (greedy_mvc, matching_2approx,
+from repro.core.solvers import (greedy_mvc_batch, matching_2approx_batch,
                                 reference_sizes)
 
 
@@ -38,6 +38,11 @@ def main():
     ap.add_argument("--spatial", type=int, default=0,
                     help="P-way spatial sharding of the GD loss/grad "
                          "(paper Alg. 5); 0 → single device")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="save the trained policy params here "
+                         "(repro.checkpoint format; load with "
+                         "`python -m repro.launch.solve_serve --ckpt-dir` "
+                         "or GraphSolverService.from_checkpoint)")
     args = ap.parse_args()
 
     kw = {"er": {"rho": 0.15}, "ba": {"d": 4}, "social": {}}[args.kind]
@@ -68,10 +73,15 @@ def main():
     print(f"done in {log.wall_time:.1f}s; final loss "
           f"{log.losses[-1]:.4f}")
 
+    if args.ckpt_dir:
+        from repro.checkpoint import save_policy
+        path = save_policy(args.ckpt_dir, agent.step_count, agent.params)
+        print(f"policy params saved to {path}")
+
     res = solve(agent.params, test, num_layers=cfg.num_layers,
                 multi_node=True, rep=args.rep)
-    greedy = np.array([greedy_mvc(a).sum() for a in test])
-    twoapp = np.array([matching_2approx(a).sum() for a in test])
+    greedy = greedy_mvc_batch(test).sum(-1)
+    twoapp = matching_2approx_batch(test).sum(-1)
     print(f"RL (adaptive) mean |MVC| : {res.sizes.mean():.2f}")
     print(f"greedy mean |MVC|        : {greedy.mean():.2f}")
     print(f"2-approx mean |MVC|      : {twoapp.mean():.2f}")

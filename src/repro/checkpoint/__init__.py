@@ -1,1 +1,2 @@
-from .ckpt import save_checkpoint, restore_checkpoint, latest_step
+from .ckpt import (save_checkpoint, restore_checkpoint, latest_step,
+                   save_policy, load_policy)

@@ -78,3 +78,25 @@ def restore_checkpoint(directory: str | pathlib.Path, template: Any,
         dtype = getattr(leaf, "dtype", arr.dtype)
         out.append(jax.numpy.asarray(arr).astype(dtype))
     return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+# ---------------------------------------------------------------------------
+# RL policy convenience wrappers: the training driver saves PolicyParams
+# here; the solver service / solve examples load them back (the template
+# comes from the PolicyConfig, so only embed_dim must match).
+# ---------------------------------------------------------------------------
+
+def save_policy(directory: str | pathlib.Path, step: int, params: Any,
+                *, keep: int = 3) -> pathlib.Path:
+    """Snapshot an RL policy's :class:`~repro.core.policy.PolicyParams`."""
+    return save_checkpoint(directory, step, params, keep=keep)
+
+
+def load_policy(directory: str | pathlib.Path, cfg,
+                step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore :class:`PolicyParams` for ``cfg`` (a ``PolicyConfig``) from
+    the newest (or an explicit) checkpoint.  Returns (params, step)."""
+    import jax as _jax
+    from ..core.policy import init_policy
+    template = _jax.eval_shape(lambda: init_policy(_jax.random.key(0), cfg))
+    return restore_checkpoint(directory, template, step)

@@ -24,10 +24,13 @@ from .replay import (ReplayBuffer, DeviceReplay, device_replay_init,
                      device_replay_push, device_replay_sample,
                      device_replay_at, device_replay_from_host,
                      tuples_to_graphs)
-from .engine import EngineState, engine_init, get_train_step, sync_to_agent
-from .inference import solve, adaptive_d, InferenceResult
+from .engine import (EngineState, engine_init, get_train_step,
+                     get_solve_step, sync_to_agent)
+from .inference import (solve, solve_with_config, adaptive_d, select_top_d,
+                        init_solve_state, InferenceResult)
 from .training import train_agent, evaluate_quality, TrainLog
 from .spatial import (make_graph_mesh, spatial_scores_fn,
-                      sparse_spatial_scores_fn, spatial_train_minibatch_fn,
+                      sparse_spatial_scores_fn, spatial_solve_scores_fn,
+                      spatial_train_minibatch_fn,
                       shard_graph_arrays, shard_sparse_arrays)
 from . import env, solvers, analysis

@@ -1,4 +1,5 @@
-"""Device-resident parallel training engine (paper Alg. 5 as ONE jitted step).
+"""Device-resident engines: parallel training (paper Alg. 5 as ONE jitted
+step) and parallel inference (paper Alg. 4 as ONE jitted while_loop).
 
 The host training loop performs, per env step: an acting sync, a remember
 sync (plus a stored-target bootstrap), and a blocking ``float(loss)`` on
@@ -26,6 +27,14 @@ over this step with one host round-trip per env step (loss + done fetch).
 RNG schedule (a stable contract, relied on by the equivalence tests):
 ``rng, k_eps, k_pick, k_train = split(rng, 4)`` per step; GD iteration t
 samples with ``split(k_train, tau)[t]`` via ``device_replay_sample``.
+
+Inference gets the same treatment (DESIGN.md §9): the host-driven Alg. 4
+driver syncs ``done`` back after EVERY policy evaluation; the fused solve
+(``get_solve_step``) runs the whole score → adaptive top-d commit → done
+check loop as one jitted ``lax.while_loop`` — zero per-eval round-trips,
+both GraphRep backends, any registered environment's commit rule, and
+optionally every evaluation spatially partitioned P-way under shard_map
+(per-eval collectives unchanged from the host spatial path).
 """
 from __future__ import annotations
 
@@ -41,6 +50,7 @@ from jax import lax
 from . import env as env_lib
 from .agent import max_q_raw, train_minibatch_raw
 from .graphrep import GraphRep, get_rep
+from .inference import select_top_d
 from .policy import PolicyConfig, PolicyParams
 from .qmodel import NEG_INF
 from .replay import (DeviceReplay, device_replay_init, device_replay_push,
@@ -193,3 +203,63 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
         return es, new_state, action, reward, done, loss
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# Fused inference engine (paper Alg. 4 as ONE jitted while_loop).
+# ---------------------------------------------------------------------------
+
+def get_solve_step(*, rep: Union[str, GraphRep, None] = None,
+                   problem: str = "mvc", num_layers: int = 2,
+                   use_adaptive: bool = False, spatial: int = 0):
+    """Build (and cache) the fused device-resident solve for a configuration.
+
+    Returns ``solve_fn(params, state, max_evals) -> (solution, evals,
+    committed)`` — the ENTIRE Alg. 4 loop (score → top-d commit → done
+    check) as one jitted ``lax.while_loop`` with no per-eval host traffic;
+    the caller's single result fetch is the solve's only host↔device sync.
+    ``spatial`` = P > 0 partitions every policy evaluation P-way under
+    shard_map (dense row blocks / sparse neighbor-list rows; same per-eval
+    collectives as the host spatial path, DESIGN.md §3), with the commit
+    running replicated like the paper's Fig. 4 lockstep argmax.
+    """
+    rep = get_rep(rep)
+    return _build_solve_step(rep, problem, num_layers, bool(use_adaptive),
+                             int(spatial))
+
+
+@functools.lru_cache(maxsize=64)
+def _build_solve_step(rep: GraphRep, problem: str, num_layers: int,
+                      use_adaptive: bool, spatial: int):
+    commit_fn = env_lib.commit_rule(problem)
+    if spatial:
+        from .spatial import make_graph_mesh, spatial_solve_scores_fn
+        score_fn = spatial_solve_scores_fn(
+            make_graph_mesh(spatial), num_layers=num_layers, rep=rep,
+            residual=env_lib.residual_semantics(problem))
+    else:
+        def score_fn(params, state):
+            return rep.scores(params, state, num_layers=num_layers)
+
+    @jax.jit
+    def solve_fn(params, state, max_evals):
+        b = state.candidate.shape[0]
+
+        def cond(carry):
+            _state, evals, _committed, done = carry
+            return jnp.logical_and(~done.all(), evals < max_evals)
+
+        def body(carry):
+            state, evals, committed, _done = carry
+            scores = score_fn(params, state)
+            sel, ncommit = select_top_d(scores, state.candidate,
+                                        use_adaptive)
+            new_state, done = commit_fn(state, sel)
+            return (new_state, evals + 1, committed + ncommit, done)
+
+        init = (state, jnp.int32(0), jnp.zeros((b,), jnp.int32),
+                jnp.zeros((b,), bool))
+        state, evals, committed, _done = lax.while_loop(cond, body, init)
+        return state.solution, evals, committed
+
+    return solve_fn

@@ -15,7 +15,7 @@ the C/S masks update.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,19 +25,57 @@ from .graphs import (GraphState, SparseGraphState, init_state,
 
 
 EnvStep = Callable[[GraphState, jax.Array], Tuple[GraphState, jax.Array, jax.Array]]
+# (state, sel mask) -> (state, done): the inference driver's commit rule
+CommitFn = Callable[[GraphState, jax.Array], Tuple[GraphState, jax.Array]]
 
 _REGISTRY: Dict[str, EnvStep] = {}
 _RESIDUAL: Dict[str, bool] = {}
+_COMMIT: Dict[str, CommitFn] = {}
 
 
-def register(name: str, residual: bool = True):
+def residual_commit(state, sel: jax.Array):
+    """Covering-problem commit (Alg. 4 lines 7-9): committing a node removes
+    its incident edges from the residual graph; done when no edge survives.
+    Delegates to the state's GraphRep backend (dense rewrites ``adj``,
+    sparse only updates masks)."""
+    from .graphrep import rep_for_state
+    return rep_for_state(state).commit(state, sel)
+
+
+def assignment_commit(state, sel: jax.Array):
+    """Assignment-problem commit (MaxCut family): committing a node assigns
+    it to S without touching the topology; done when no candidate remains.
+    Works on both representations — only the C/S masks update."""
+    solution = jnp.maximum(state.solution, sel)
+    candidate = jnp.clip(state.candidate - sel, 0.0, 1.0)
+    done = candidate.sum(-1) == 0
+    if isinstance(state, SparseGraphState):
+        new = SparseGraphState(neighbors=state.neighbors, valid=state.valid,
+                               candidate=candidate, solution=solution,
+                               residual=state.residual)
+    else:
+        new = GraphState(adj=state.adj, candidate=candidate,
+                         solution=solution)
+    return new, done
+
+
+def register(name: str, residual: bool = True,
+             commit: Optional[CommitFn] = None):
     """Register an environment step.  ``residual`` declares whether the
     policy should see the residual subgraph implied by S (MVC: selecting a
     node removes its edges) or the original topology (MaxCut: it doesn't) —
-    the GraphRep backends re-materialize replay states accordingly."""
+    the GraphRep backends re-materialize replay states accordingly.
+
+    ``commit`` is the problem's top-d commit/termination rule for the
+    Alg. 4 inference driver (``repro.core.inference.solve``); it defaults
+    to :func:`residual_commit` (covering semantics) when ``residual`` and
+    :func:`assignment_commit` otherwise, and must be jit-traceable on both
+    representations."""
     def deco(fn):
         _REGISTRY[name] = fn
         _RESIDUAL[name] = residual
+        _COMMIT[name] = commit or (residual_commit if residual
+                                   else assignment_commit)
         return fn
     return deco
 
@@ -48,6 +86,13 @@ def make(name: str) -> EnvStep:
 
 def residual_semantics(name: str) -> bool:
     return _RESIDUAL[name]
+
+
+def commit_rule(name: str) -> CommitFn:
+    """The problem's commit/termination rule (solve's stop condition is
+    env-polymorphic: MVC stops on an empty residual edge set, MaxCut on an
+    empty candidate set)."""
+    return _COMMIT[name]
 
 
 def names():

@@ -1,17 +1,30 @@
 """Parallel RL inference (paper Alg. 4) + adaptive multiple-node selection
-(paper §4.5.1), representation-polymorphic via the GraphRep backends.
+(paper §4.5.1), representation- and environment-polymorphic.
 
-``solve`` drives a batch of B graphs to complete MVC solutions using the
+``solve`` drives a batch of B graphs to complete solutions using the
 (pre)trained policy, on EITHER the dense (B, N, N) adjacency path or the
 sparse (B, N, D) padded neighbor-list path (``rep="dense"|"sparse"``, see
-DESIGN.md §1).  Each iteration is one policy evaluation; with the adaptive
-schedule, up to d ∈ {8,4,2,1} top-scoring candidates are committed per
-evaluation, with d shrinking as the candidate set shrinks:
+DESIGN.md §1), for ANY registered environment (``problem="mvc"|"maxcut"``
+— the commit/termination rule comes from the env registry, DESIGN.md §9).
+Each iteration is one policy evaluation; with the adaptive schedule, up to
+d ∈ {8,4,2,1} top-scoring candidates are committed per evaluation, with d
+shrinking as the candidate set shrinks:
 
     |C| >  N/2        -> d = 8
     |C| in (N/4, N/2] -> d = 4
     |C| in (N/8, N/4] -> d = 2
     |C| <= N/8        -> d = 1
+
+Two execution engines, selected like the training engine (DESIGN.md §8/§9):
+
+- ``engine="device"`` (default) — the FUSED solve: the whole score →
+  top-d commit → done-check loop is one jitted ``lax.while_loop``
+  (``repro.core.engine.get_solve_step``) with a single host↔device
+  round-trip per solve, optionally under the P-way spatial shard_map path
+  (``spatial=P``).
+- ``engine="host"`` — the reference loop: one jitted step per policy
+  evaluation with a blocking ``done`` fetch after each (the paper's
+  host-driven driver); the fused path is tested bit-identical against it.
 """
 from __future__ import annotations
 
@@ -23,6 +36,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from . import env as env_lib
+from .graphs import SparseGraphState
 from .graphrep import GraphRep, get_rep
 from .policy import PolicyConfig, PolicyParams
 from .qmodel import NEG_INF
@@ -38,34 +53,59 @@ def adaptive_d(num_candidates: jax.Array, n: int) -> jax.Array:
            jnp.where(c > n / 8, 2, 1))).astype(jnp.int32)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("rep", "num_layers", "use_adaptive"))
-def _inference_step(params: PolicyParams, state, *, rep: GraphRep,
-                    num_layers: int, use_adaptive: bool):
-    """One policy evaluation + top-d commit (Alg. 4 body, vectorized over B).
+def select_top_d(scores: jax.Array, candidate: jax.Array,
+                 use_adaptive: bool) -> Tuple[jax.Array, jax.Array]:
+    """Alg. 4 lines 5-7: top-d selection mask from masked scores.
 
-    Identical on both representations: the backend supplies the scores and
-    the commit rule; only the state layout differs.  Finished graphs (no
-    candidates) commit nothing.
+    Returns ``(sel, ncommit)``: the (B, N) union-of-one-hots commit mask
+    and the (B,) per-graph commit count.  Finished graphs (no candidates →
+    all scores NEG_INF) select nothing.  Shared verbatim by the host-loop
+    step and the fused while_loop body so the two engines stay
+    bit-identical.
     """
-    b, n = state.candidate.shape
-    scores = rep.scores(params, state, num_layers=num_layers)  # (B, N) masked
+    b, n = candidate.shape
     top_scores, top_idx = jax.lax.top_k(scores, MAX_D)      # (B, 8)
-    ncand = state.candidate.sum(-1)
+    ncand = candidate.sum(-1)
     d = adaptive_d(ncand, n) if use_adaptive else jnp.ones((b,), jnp.int32)
     rank = jnp.arange(MAX_D)[None, :]
     valid = (rank < d[:, None]) & (top_scores > NEG_INF / 2)
-    # commit mask: union of selected one-hots
     sel = jnp.zeros((b, n), jnp.float32)
     sel = sel.at[jnp.arange(b)[:, None], top_idx].max(valid.astype(jnp.float32))
-    new_state, done = rep.commit(state, sel)
-    return new_state, done, valid.sum(-1)
+    return sel, valid.sum(-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rep", "problem", "num_layers",
+                                    "use_adaptive"))
+def _inference_step(params: PolicyParams, state, *, rep: GraphRep,
+                    problem: str, num_layers: int, use_adaptive: bool):
+    """One policy evaluation + top-d commit (Alg. 4 body, vectorized over B).
+
+    Identical on both representations: the backend supplies the scores,
+    the env registry the commit/termination rule; only the state layout
+    differs.  Finished graphs (no candidates) commit nothing.
+    """
+    scores = rep.scores(params, state, num_layers=num_layers)  # (B, N) masked
+    sel, ncommit = select_top_d(scores, state.candidate, use_adaptive)
+    new_state, done = env_lib.commit_rule(problem)(state, sel)
+    return new_state, done, ncommit
+
+
+def init_solve_state(rep: GraphRep, adj, problem: str = "mvc"):
+    """Fresh solve state in ``rep``'s layout, carrying the env's residual
+    semantics (MaxCut on the sparse path must score the ORIGINAL topology,
+    so its state is flagged non-residual — see ``env.register``)."""
+    state = rep.init_state(adj)
+    if (isinstance(state, SparseGraphState)
+            and not env_lib.residual_semantics(problem)):
+        state = dataclasses.replace(state, residual=False)
+    return state
 
 
 @dataclasses.dataclass
 class InferenceResult:
     solution: np.ndarray       # (B, N) masks
-    sizes: np.ndarray          # (B,) |MVC|
+    sizes: np.ndarray          # (B,) |S|
     policy_evals: int          # number of policy-model evaluations
     nodes_committed: np.ndarray
 
@@ -73,23 +113,49 @@ class InferenceResult:
 def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
           multi_node: bool = False, max_evals: Optional[int] = None,
           step_fn: Optional[Callable] = None,
-          rep: Union[str, GraphRep] = "dense") -> InferenceResult:
-    """Run Alg. 4 until every graph in the batch has a complete cover.
+          rep: Union[str, GraphRep] = "dense", problem: str = "mvc",
+          engine: str = "device", spatial: int = 0) -> InferenceResult:
+    """Run Alg. 4 until every graph in the batch has a complete solution.
 
     multi_node=False reproduces the original d=1 algorithm; True enables the
     adaptive schedule of §4.5.1 — on both representations.  ``rep`` selects
     the graph backend ("dense" | "sparse" or a GraphRep instance);
-    ``step_fn`` may override the jitted step (used by the spatially-
-    partitioned path).
+    ``problem`` the registered environment whose commit/termination rule
+    drives the loop; ``engine`` the execution engine ("device" = fused
+    jitted while_loop, one host sync per solve; "host" = per-eval loop);
+    ``spatial`` > 0 partitions every policy evaluation P-way under
+    shard_map (device engine only).  ``step_fn`` may override the jitted
+    step (host engine only; kept for custom drivers).
     """
+    if engine not in ("host", "device"):
+        raise ValueError(f"unknown inference engine {engine!r}")
     rep = get_rep(rep)
-    state = rep.init_state(adj0)
+    state = init_solve_state(rep, adj0, problem)
     n = state.num_nodes
     max_evals = max_evals or (n + MAX_D)
+
+    if engine == "device" and step_fn is None:
+        from .engine import get_solve_step
+        fused = get_solve_step(rep=rep, problem=problem,
+                               num_layers=num_layers,
+                               use_adaptive=multi_node, spatial=spatial)
+        # the solve's single host↔device round-trip: one result fetch
+        sol, evals, committed = jax.device_get(
+            fused(params, state, jnp.asarray(max_evals, jnp.int32)))
+        return InferenceResult(solution=sol,
+                               sizes=sol.sum(-1).astype(np.int64),
+                               policy_evals=int(evals),
+                               nodes_committed=committed.astype(np.int64))
+    if spatial:
+        raise ValueError("spatial solve runs on the fused path only; it is "
+                         "incompatible with engine='host' and with step_fn "
+                         "overrides")
+
     evals = 0
     committed = np.zeros((state.batch,), np.int64)
     fn = step_fn or (lambda p, s: _inference_step(
-        p, s, rep=rep, num_layers=num_layers, use_adaptive=multi_node))
+        p, s, rep=rep, problem=problem, num_layers=num_layers,
+        use_adaptive=multi_node))
     for _ in range(max_evals):
         state, done, ncommit = fn(params, state)
         evals += 1
@@ -99,3 +165,14 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
     sol = np.asarray(state.solution)
     return InferenceResult(solution=sol, sizes=sol.sum(-1).astype(np.int64),
                            policy_evals=evals, nodes_committed=committed)
+
+
+def solve_with_config(params: PolicyParams, adj0, cfg: PolicyConfig, *,
+                      multi_node: bool = False, problem: str = "mvc",
+                      **kw) -> InferenceResult:
+    """``solve`` with rep/engine/spatial/num_layers taken from a
+    :class:`PolicyConfig` — the same config-driven selection the training
+    engine uses (DESIGN.md §8/§9)."""
+    return solve(params, adj0, num_layers=cfg.num_layers,
+                 rep=cfg.graph_rep, engine=cfg.engine, spatial=cfg.spatial,
+                 multi_node=multi_node, problem=problem, **kw)

@@ -68,13 +68,17 @@ def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
 
 
 def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
-                             gather_impl=None):
+                             gather_impl=None, *, residual: bool = True):
     """Build the P-way partitioned scorer on distributed sparse storage.
 
     in:  neighbors (B, N, D) int32, valid (B, N, D) bool, sol (B, N),
          cand (B, N)   [all sharded on the node axis: each device holds the
          (B, N/P, D) neighbor-list rows of its resident nodes]
     out: scores (B, N) replicated.
+
+    ``residual=False`` scores the ORIGINAL topology (MaxCut semantics —
+    committing a node deletes no edges), skipping the solution-mask
+    all-gather that the residual-edge factors need.
     """
 
     from ..sharding.compat import shard_map_nocheck
@@ -86,14 +90,18 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
         out_specs=P(),
     )
     def scorer(params: PolicyParams, nbr_l, valid_l, sol_l, cand_l):
-        # Residual-edge factors need keep[] of REMOTE neighbor endpoints:
-        # one all-gather of the (B, N) solution mask (4·N·B bytes — paper
-        # §5.1's C/S broadcast).
-        sol_full = lax.all_gather(sol_l, AXIS, axis=1, tiled=True)
-        keep_full = jnp.pad(1.0 - sol_full, ((0, 0), (0, 1)))  # sentinel
-        keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_full, nbr_l)
-        keep_l = 1.0 - sol_l
-        edge_l = valid_l.astype(jnp.float32) * keep_nbr * keep_l[:, :, None]
+        if residual:
+            # Residual-edge factors need keep[] of REMOTE neighbor
+            # endpoints: one all-gather of the (B, N) solution mask
+            # (4·N·B bytes — paper §5.1's C/S broadcast).
+            sol_full = lax.all_gather(sol_l, AXIS, axis=1, tiled=True)
+            keep_full = jnp.pad(1.0 - sol_full, ((0, 0), (0, 1)))  # sentinel
+            keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_full, nbr_l)
+            keep_l = 1.0 - sol_l
+            edge_l = (valid_l.astype(jnp.float32) * keep_nbr
+                      * keep_l[:, :, None])
+        else:
+            edge_l = valid_l.astype(jnp.float32)
         emb_l = embed_sparse_local(params.em, nbr_l, edge_l, sol_l,
                                    num_layers=num_layers, axis=AXIS,
                                    gather_impl=gather_impl)
@@ -101,6 +109,27 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
         return lax.all_gather(local, AXIS, axis=1, tiled=True)
 
     return scorer
+
+
+def spatial_solve_scores_fn(mesh: jax.sharding.Mesh, *, num_layers: int,
+                            rep, residual: bool = True):
+    """State-in, scores-out wrapper around the P-way partitioned scorers for
+    the FUSED solve loop (DESIGN.md §9): takes the replicated solve state,
+    reshards its arrays onto the mesh's node-row partitioning inside jit,
+    runs one spatially-partitioned policy evaluation (per-eval collectives
+    unchanged from the host spatial path), and returns the all-gathered
+    (B, N) scores on every device so the top-d commit runs replicated —
+    the paper's Fig. 4 lockstep selection.
+    """
+    if rep.name == "sparse":
+        scorer = sparse_spatial_scores_fn(mesh, num_layers,
+                                          residual=residual)
+        return lambda params, state: scorer(params, state.neighbors,
+                                            state.valid, state.solution,
+                                            state.candidate)
+    scorer = spatial_scores_fn(mesh, num_layers)
+    return lambda params, state: scorer(params, state.adj, state.solution,
+                                        state.candidate)
 
 
 def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,

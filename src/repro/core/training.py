@@ -47,7 +47,8 @@ def evaluate_quality(agent: Agent, test_adj: np.ndarray,
     ``rep=None`` follows the agent's configured backend."""
     rep = get_rep(rep if rep is not None else agent.cfg.graph_rep)
     res = solve(agent.params, test_adj, num_layers=agent.cfg.num_layers,
-                multi_node=multi_node, rep=rep)
+                multi_node=multi_node, rep=rep,
+                engine=getattr(agent.cfg, "engine", "device"))
     return float(np.mean(res.sizes / np.maximum(reference_sizes, 1)))
 
 

@@ -1,0 +1,7 @@
+"""Graph-solver serving layer (DESIGN.md §9): request queue, power-of-two
+size bucketing + padding, per-bucket compiled-step cache, and batched
+dispatch to the fused device-resident inference engine."""
+from .bucketing import (MIN_BUCKET, BatchPlan, bucket_nodes, pad_adjacency,
+                        plan_batches, unpad_solution)
+from .service import (GraphSolverService, ServiceStats, SolveRequest,
+                      SolveResponse)

@@ -1,0 +1,84 @@
+"""Size bucketing + padding for the graph-solver service (DESIGN.md §9).
+
+Requests arrive with heterogeneous node counts; the fused solve engine
+(`repro.core.engine.get_solve_step`) compiles per (B, N) shape.  To keep
+the compiled-step cache small and hit rates high, requests are rounded up
+to power-of-two node buckets and batched into fixed-size (max_batch, Nb,
+Nb) batches — the continuous-batching trick from LLM serving
+(`examples/serve_batched.py`) applied to graphs: ONE compile per bucket,
+ever, no matter what sizes the traffic mixes.
+
+Padding is by isolated nodes: a zero row/column in the adjacency gives the
+padding node degree 0, so it is never a candidate, never scores, never
+commits, and never changes ``done`` — for covering AND assignment
+environments alike (both derive candidates from degree > 0 at init).
+Unused batch rows are empty (edge-free) graphs: they are born done and
+commit nothing, so they only cost compute, never correctness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+MIN_BUCKET = 8
+
+
+def bucket_nodes(n: int, min_bucket: int = MIN_BUCKET) -> int:
+    """Power-of-two node bucket: the smallest 2^k ≥ max(n, min_bucket)."""
+    if n < 1:
+        raise ValueError(f"graph must have ≥1 node, got {n}")
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_adjacency(adj: np.ndarray, nb: int) -> np.ndarray:
+    """Zero-pad an (n, n) adjacency to (nb, nb) — isolated padding nodes."""
+    n = adj.shape[-1]
+    if n > nb:
+        raise ValueError(f"graph with {n} nodes does not fit bucket {nb}")
+    return np.pad(np.asarray(adj, np.float32),
+                  ((0, nb - n), (0, nb - n)))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """One dispatch to the fused engine: a (batch, nb, nb) padded stack plus
+    the request ids and true sizes of the occupied rows."""
+    nb: int                    # bucket node count (power of two)
+    problem: str
+    adj: np.ndarray            # (batch, nb, nb) float32, zero rows unused
+    request_ids: Tuple[int, ...]
+    sizes: Tuple[int, ...]     # true node counts per occupied row
+
+
+def plan_batches(requests: Sequence, max_batch: int,
+                 min_bucket: int = MIN_BUCKET) -> List[BatchPlan]:
+    """Group pending requests by (bucket, problem) and cut fixed-size
+    batches.  Every plan's batch dim is exactly ``max_batch`` (unused rows
+    are empty graphs) so each bucket compiles once."""
+    groups: Dict[Tuple[int, str], List] = {}
+    for req in requests:
+        key = (bucket_nodes(req.n, min_bucket), req.problem)
+        groups.setdefault(key, []).append(req)
+    plans = []
+    for (nb, problem), reqs in sorted(groups.items(),
+                                      key=lambda kv: kv[0]):
+        for i in range(0, len(reqs), max_batch):
+            chunk = reqs[i:i + max_batch]
+            adj = np.zeros((max_batch, nb, nb), np.float32)
+            for row, req in enumerate(chunk):
+                adj[row] = pad_adjacency(req.adj, nb)
+            plans.append(BatchPlan(
+                nb=nb, problem=problem, adj=adj,
+                request_ids=tuple(r.id for r in chunk),
+                sizes=tuple(r.n for r in chunk)))
+    return plans
+
+
+def unpad_solution(solution_row: np.ndarray, n: int) -> np.ndarray:
+    """Strip padding nodes from one (nb,) solution mask back to (n,)."""
+    return np.asarray(solution_row[:n])

@@ -1,0 +1,216 @@
+"""Graph-solver service: continuous-batching request layer over the fused
+device-resident inference engine (DESIGN.md §9).
+
+The engine/driver split mirrors the training half (DESIGN.md §8): the
+fused solve (`repro.core.engine.get_solve_step`) is the numerical engine —
+one jitted while_loop per dispatch, one host↔device sync — and this module
+is the request-level driver on top: a submission queue, power-of-two size
+bucketing with isolated-node padding (`repro.serving.bucketing`), a
+per-bucket compiled-step cache, batched dispatch, and per-request result
+extraction.  Policy parameters come from a `repro.checkpoint` snapshot or
+are injected directly.
+
+    svc = GraphSolverService.from_checkpoint(ckpt_dir, cfg)
+    rid = svc.submit(adj)                   # any node count, any env
+    results = svc.drain()                   # dict id -> SolveResponse
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core.graphrep import GraphRep, get_rep
+from ..core.policy import PolicyConfig, PolicyParams
+from .bucketing import MIN_BUCKET, BatchPlan, plan_batches, unpad_solution
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    id: int
+    adj: np.ndarray            # (n, n) dense adjacency
+    n: int
+    problem: str = "mvc"
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResponse:
+    id: int
+    solution: np.ndarray       # (n,) mask over the REQUEST's nodes
+    size: int                  # |S|
+    policy_evals: int          # evals of the batch this request rode in
+    bucket: int                # padded node count it was served at
+    problem: str
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    batches: int = 0
+    compiles: int = 0          # per-bucket compiled-step cache misses
+    cache_hits: int = 0
+    padded_rows: int = 0       # unused batch rows dispatched
+    solve_seconds: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class GraphSolverService:
+    """Batched graph-solver frontend over the fused inference engine.
+
+    Parameters
+    ----------
+    params : PolicyParams — the (pre)trained policy.
+    cfg : PolicyConfig — supplies num_layers and the rep/spatial selection
+        (the same config-driven switches as training; the service always
+        dispatches to the fused device engine — use ``repro.core.solve``
+        directly for the host-loop reference).
+    multi_node : adaptive top-d commit schedule (§4.5.1) per evaluation.
+    max_batch : rows per dispatch; every batch is padded to exactly this
+        many rows so each (bucket, problem) pair compiles ONCE.
+    sparse_max_degree : sparse backend only — neighbor-list width per
+        bucket.  The default pins it to the bucket's node count (the only
+        traffic-independent safe bound), keeping shapes fully static; pass
+        a smaller cap when the traffic's degrees are bounded (graphs
+        exceeding it are rejected rather than silently truncated).
+    """
+
+    def __init__(self, params: PolicyParams, cfg: PolicyConfig, *,
+                 rep: Union[str, GraphRep, None] = None,
+                 multi_node: bool = True, max_batch: int = 8,
+                 min_bucket: int = MIN_BUCKET,
+                 sparse_max_degree: Optional[int] = None):
+        from ..core.engine import get_solve_step
+        self.params = params
+        self.cfg = cfg
+        self.rep = get_rep(rep if rep is not None else cfg.graph_rep)
+        self.multi_node = multi_node
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.sparse_max_degree = sparse_max_degree
+        self.stats = ServiceStats()
+        self._queue: Deque[SolveRequest] = deque()
+        self._next_id = 0
+        self._compiled: Dict[tuple, object] = {}
+        self._bucket_reps: Dict[int, GraphRep] = {}
+        self._results: Dict[int, SolveResponse] = {}
+        self._get_solve_step = get_solve_step
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir, cfg: PolicyConfig,
+                        step: Optional[int] = None,
+                        **kw) -> "GraphSolverService":
+        """Load policy params from a `repro.checkpoint` snapshot."""
+        from ..checkpoint import load_policy
+        params, _step = load_policy(ckpt_dir, cfg, step)
+        return cls(params, cfg, **kw)
+
+    # -- request queue ------------------------------------------------------
+    def submit(self, adj: np.ndarray, problem: str = "mvc") -> int:
+        """Enqueue one graph; returns the request id."""
+        adj = np.asarray(adj, np.float32)
+        if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+            raise ValueError(f"expected a square (n, n) adjacency, "
+                             f"got {adj.shape}")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(SolveRequest(id=rid, adj=adj, n=adj.shape[0],
+                                        problem=problem))
+        self.stats.requests += 1
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- dispatch -----------------------------------------------------------
+    def _bucket_rep(self, nb: int) -> GraphRep:
+        """The backend a bucket dispatches through.  Sparse states must pin
+        their neighbor-list width per bucket (the singleton derives it from
+        each batch's true max degree, which would retrace the jitted solve
+        whenever traffic changes it)."""
+        if self.rep.name != "sparse":
+            return self.rep
+        rep = self._bucket_reps.get(nb)
+        if rep is None:
+            from ..core.graphrep import SparseRep
+            rep = SparseRep(max_degree=self.sparse_max_degree or nb)
+            self._bucket_reps[nb] = rep
+        return rep
+
+    def _solve_fn(self, nb: int, problem: str):
+        """Per-bucket compiled-step cache: one fused solve per
+        (bucket, problem) — shapes are fixed by the bucketing (and, on the
+        sparse backend, by the pinned neighbor-list width), so a hit never
+        retraces."""
+        key = (nb, problem, self.rep.name, self.multi_node,
+               self.cfg.num_layers, self.cfg.spatial)
+        fn = self._compiled.get(key)
+        if fn is None:
+            self.stats.compiles += 1
+            fn = self._get_solve_step(
+                rep=self._bucket_rep(nb), problem=problem,
+                num_layers=self.cfg.num_layers,
+                use_adaptive=self.multi_node, spatial=self.cfg.spatial)
+            self._compiled[key] = fn
+        else:
+            self.stats.cache_hits += 1
+        return fn
+
+    def _dispatch(self, plan: BatchPlan) -> List[SolveResponse]:
+        import jax
+        import jax.numpy as jnp
+        from ..core.inference import MAX_D, init_solve_state
+        fn = self._solve_fn(plan.nb, plan.problem)
+        state = init_solve_state(self._bucket_rep(plan.nb), plan.adj,
+                                 plan.problem)
+        t0 = time.perf_counter()
+        # the dispatch's single host↔device sync: one result fetch
+        sol, evals, _committed = jax.device_get(
+            fn(self.params, state,
+               jnp.asarray(plan.nb + MAX_D, jnp.int32)))
+        self.stats.solve_seconds += time.perf_counter() - t0
+        self.stats.batches += 1
+        self.stats.padded_rows += self.max_batch - len(plan.request_ids)
+        out = []
+        for row, (rid, n) in enumerate(zip(plan.request_ids, plan.sizes)):
+            mask = unpad_solution(sol[row], n)
+            out.append(SolveResponse(
+                id=rid, solution=mask, size=int(mask.sum()),
+                policy_evals=int(evals), bucket=plan.nb,
+                problem=plan.problem))
+        return out
+
+    def drain(self) -> Dict[int, SolveResponse]:
+        """Serve every pending request: bucket, pad, batch, run the fused
+        engine per batch, unpad per request.
+
+        Crash-safe: if a dispatch raises (e.g. an OOM compiling a new
+        bucket), unserved requests go back on the queue for retry and
+        already-computed responses are held over for the next drain —
+        nothing is silently dropped."""
+        requests = list(self._queue)
+        self._queue.clear()
+        pending = {r.id: r for r in requests}
+        try:
+            for plan in plan_batches(requests, self.max_batch,
+                                     self.min_bucket):
+                for resp in self._dispatch(plan):
+                    self._results[resp.id] = resp
+                    pending.pop(resp.id, None)
+        except BaseException:
+            self._queue.extend(pending.values())
+            raise
+        results, self._results = self._results, {}
+        return results
+
+    def serve(self, adjs: Sequence[np.ndarray],
+              problem: str = "mvc") -> List[SolveResponse]:
+        """Convenience: submit a request stream and drain it, preserving
+        submission order in the returned list."""
+        ids = [self.submit(a, problem) for a in adjs]
+        results = self.drain()
+        return [results[i] for i in ids]

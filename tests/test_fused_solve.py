@@ -1,0 +1,175 @@
+"""Fused device-resident inference engine (DESIGN.md §9): the single
+jitted-while_loop solve must reproduce the host-driven Alg. 4 reference
+loop EXACTLY — solutions, eval counts, commit counts — on both GraphRep
+backends, under the adaptive d schedule, for every registered environment,
+and under the P-way spatial shard_map path."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (PolicyConfig, init_policy, random_graph_batch,
+                        solve, solve_with_config, get_solve_step,
+                        init_solve_state, get_rep)
+from repro.core import env as env_lib
+from repro.core.env import is_cover
+from repro.core.graphs import SparseGraphState
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    adj = random_graph_batch("er", 30, 4, seed=0, rho=0.2)
+    params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=8))
+    return adj, params
+
+
+@pytest.mark.parametrize("rep", ["dense", "sparse"])
+@pytest.mark.parametrize("multi_node", [False, True])
+def test_fused_solve_matches_host_loop(setup, rep, multi_node):
+    """Bit-identical solutions AND identical eval/commit accounting on both
+    representations, d=1 and adaptive d ∈ {8,4,2,1}."""
+    adj, params = setup
+    host = solve(params, adj, num_layers=2, multi_node=multi_node,
+                 rep=rep, engine="host")
+    dev = solve(params, adj, num_layers=2, multi_node=multi_node,
+                rep=rep, engine="device")
+    assert (host.solution == dev.solution).all()
+    assert host.policy_evals == dev.policy_evals
+    assert (host.nodes_committed == dev.nodes_committed).all()
+    assert np.asarray(is_cover(jnp.asarray(adj),
+                               jnp.asarray(dev.solution))).all()
+
+
+def test_fused_solve_single_fetch_counts(setup):
+    """The fused path is ONE compiled call returning (solution, evals,
+    committed): eval counts come back correct without any per-eval host
+    loop (the edge-free batch terminates after exactly one evaluation)."""
+    adj, params = setup
+    empty = np.zeros((2, 16, 16), np.float32)
+    res = solve(params, empty, num_layers=2, engine="device")
+    assert res.policy_evals == 1          # one while_loop trip, then done
+    assert res.sizes.tolist() == [0, 0]
+    fn = get_solve_step(rep="dense", problem="mvc", num_layers=2)
+    out = fn(params, init_solve_state(get_rep("dense"), adj, "mvc"),
+             jnp.asarray(38, jnp.int32))
+    assert len(out) == 3                  # solution, evals, committed
+
+
+@pytest.mark.parametrize("rep", ["dense", "sparse"])
+def test_maxcut_inference(setup, rep):
+    """Env-polymorphic stopping: solve runs MaxCut through the registry's
+    assignment commit rule — stops when candidates are exhausted (NOT on
+    residual edges), assigns every positive-degree node, identical on both
+    engines."""
+    adj, params = setup
+    host = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                 problem="maxcut", engine="host")
+    dev = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                problem="maxcut", engine="device")
+    assert (host.solution == dev.solution).all()
+    assert host.policy_evals == dev.policy_evals
+    deg = adj.sum(-1)
+    assert (dev.solution == (deg > 0)).all()   # every candidate assigned
+
+
+def test_commit_rules_registered():
+    assert env_lib.commit_rule("mvc") is env_lib.residual_commit
+    assert env_lib.commit_rule("maxcut") is env_lib.assignment_commit
+
+
+def test_maxcut_sparse_state_non_residual(setup):
+    """MaxCut on the sparse path must score the ORIGINAL topology: the
+    solve state carries residual=False from the env registry."""
+    adj, params = setup
+    st = init_solve_state(get_rep("sparse"), adj, "maxcut")
+    assert isinstance(st, SparseGraphState) and st.residual is False
+    assert init_solve_state(get_rep("sparse"), adj, "mvc").residual is True
+
+
+def test_solve_with_config(setup):
+    """Config-driven engine/rep selection, mirroring the training engine."""
+    adj, params = setup
+    cfg = PolicyConfig(embed_dim=8, num_layers=2, graph_rep="sparse",
+                       engine="device")
+    ref = solve(params, adj, num_layers=2, multi_node=True, rep="sparse",
+                engine="host")
+    res = solve_with_config(params, adj, cfg, multi_node=True)
+    assert (res.solution == ref.solution).all()
+
+
+def test_spatial_fused_solve_p1(setup):
+    """The fused spatial solve at P=1 (mesh of one device, in-process)
+    must equal both the replicated fused solve and the host loop, on both
+    representations."""
+    adj, params = setup
+    for rep in ("dense", "sparse"):
+        ref = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                    engine="host")
+        sp = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                   engine="device", spatial=1)
+        assert (ref.solution == sp.solution).all()
+        assert ref.policy_evals == sp.policy_evals
+
+
+def test_spatial_requires_device_engine(setup):
+    adj, params = setup
+    with pytest.raises(ValueError):
+        solve(params, adj, engine="host", spatial=2)
+    with pytest.raises(ValueError):
+        solve(params, adj, engine="bogus")
+
+
+_CHILD_SPATIAL = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import json
+    import numpy as np
+    import jax
+    from repro.core import (PolicyConfig, init_policy, random_graph_batch,
+                            solve)
+
+    adj = random_graph_batch("er", 24, 2, seed=5, rho=0.25)
+    params = init_policy(jax.random.key(2), PolicyConfig(embed_dim=16))
+    out = {}
+    for rep in ("dense", "sparse"):
+        ref = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                    engine="host")
+        p1 = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                   engine="device", spatial=1)
+        p2 = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                   engine="device", spatial=2)
+        out[rep] = {
+            "ref": ref.sizes.tolist(),
+            "p1": p1.sizes.tolist(), "p2": p2.sizes.tolist(),
+            "p1_eq": bool((p1.solution == ref.solution).all()),
+            "p2_eq": bool((p2.solution == ref.solution).all()),
+            "evals": [ref.policy_evals, p1.policy_evals, p2.policy_evals],
+        }
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_spatial_fused_solve_p2_consistency():
+    """P=1 == P=2 == host reference for the FUSED spatial solve: the whole
+    while_loop jitted with per-eval shard_map collectives inside
+    (subprocess with a forced 2-device host platform), both reps."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", _CHILD_SPATIAL],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for rep in ("dense", "sparse"):
+        r = res[rep]
+        assert r["p1_eq"] and r["p2_eq"], r
+        assert r["evals"][0] == r["evals"][1] == r["evals"][2]

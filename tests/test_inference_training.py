@@ -65,6 +65,18 @@ def test_exact_vs_bounds():
         assert opt <= matching_2approx(a).sum() <= 2 * opt
 
 
+def test_reference_sizes_heterogeneous_batches():
+    """reference_sizes accepts ragged graph lists (mixed node counts) on
+    both the exact and the batched-LB fallback path, matching the
+    per-graph answers."""
+    graphs = [random_graph_batch("er", n, 1, seed=n, rho=0.3)[0]
+              for n in (10, 14, 18)]
+    assert reference_sizes(graphs).tolist() \
+        == [exact_mvc_size(a) for a in graphs]
+    lbs = reference_sizes(graphs, exact_limit=5)
+    assert lbs.tolist() == [max(mvc_lower_bound(a), 1) for a in graphs]
+
+
 def test_train_agent_smoke_and_learning_signal():
     """A short run must execute end-to-end; ratio stays in a sane band and
     solutions remain valid covers (full Fig-6 reproduction lives in

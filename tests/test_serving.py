@@ -1,0 +1,167 @@
+"""Graph-solver service (DESIGN.md §9): size bucketing + padding,
+per-bucket compiled-step cache, batched dispatch through the fused
+engine, per-request extraction, and the checkpoint round trip."""
+import numpy as np
+import jax
+import pytest
+
+from repro.checkpoint import load_policy, save_policy
+from repro.core import PolicyConfig, init_policy, solve
+from repro.core.graphs import erdos_renyi
+from repro.serving import (GraphSolverService, bucket_nodes, pad_adjacency,
+                           plan_batches, SolveRequest)
+
+
+@pytest.fixture(scope="module")
+def policy():
+    cfg = PolicyConfig(embed_dim=8, num_layers=2)
+    return init_policy(jax.random.key(3), cfg), cfg
+
+
+def test_bucket_nodes():
+    assert [bucket_nodes(n) for n in (1, 8, 9, 16, 17, 100)] \
+        == [8, 8, 16, 16, 32, 128]
+    with pytest.raises(ValueError):
+        bucket_nodes(0)
+
+
+def test_pad_adjacency_isolated_nodes():
+    a = erdos_renyi(10, 0.3, seed=0)
+    p = pad_adjacency(a, 16)
+    assert p.shape == (16, 16)
+    assert (p[:10, :10] == a).all()
+    assert p[10:].sum() == 0 and p[:, 10:].sum() == 0
+    with pytest.raises(ValueError):
+        pad_adjacency(a, 8)
+
+
+def test_plan_batches_mixed_sizes():
+    reqs = [SolveRequest(id=i, adj=np.zeros((n, n), np.float32), n=n)
+            for i, n in enumerate([5, 9, 20, 9, 5, 33])]
+    plans = plan_batches(reqs, max_batch=2)
+    # buckets: 8 (n=5,5), 16 (n=9,9), 32 (n=20), 64 (n=33)
+    assert [(p.nb, p.request_ids) for p in plans] == [
+        (8, (0, 4)), (16, (1, 3)), (32, (2,)), (64, (5,))]
+    for p in plans:
+        assert p.adj.shape == (2, p.nb, p.nb)     # fixed batch dim
+        # unused rows are empty graphs
+        for row in range(len(p.request_ids), 2):
+            assert p.adj[row].sum() == 0
+
+
+def test_plan_batches_separates_problems():
+    reqs = [SolveRequest(id=0, adj=np.zeros((8, 8), np.float32), n=8),
+            SolveRequest(id=1, adj=np.zeros((8, 8), np.float32), n=8,
+                         problem="maxcut")]
+    plans = plan_batches(reqs, max_batch=4)
+    assert {(p.nb, p.problem) for p in plans} \
+        == {(8, "mvc"), (8, "maxcut")}
+
+
+def test_service_mixed_size_stream(policy):
+    """Pads/unpads correctly for ≥3 distinct N: every response equals the
+    direct fused solve of its own graph padded to the same bucket — the
+    batch composition and the padding never leak into a request's answer."""
+    params, cfg = policy
+    svc = GraphSolverService(params, cfg, max_batch=3)
+    sizes = [6, 11, 6, 19, 11, 6, 19]
+    adjs = [erdos_renyi(n, 0.3, seed=10 + i)
+            for i, n in enumerate(sizes)]
+    responses = svc.serve(adjs)
+    assert [len(r.solution) for r in responses] == sizes
+    for r, adj, n in zip(responses, adjs, sizes):
+        nb = bucket_nodes(n)
+        assert r.bucket == nb
+        direct = solve(params, pad_adjacency(adj, nb)[None],
+                       num_layers=cfg.num_layers, multi_node=True,
+                       engine="device")
+        assert (r.solution == direct.solution[0, :n]).all()
+        assert direct.solution[0, n:].sum() == 0   # padding never selected
+        # the unpadded mask is a valid cover of the original graph
+        keep = r.solution < 0.5
+        assert adj[np.ix_(keep, keep)].sum() == 0
+    s = svc.stats
+    assert s.requests == len(sizes)
+    assert s.compiles == 3                 # buckets 8, 16, 32: one compile each
+    assert s.batches == 3                  # 8→[6,6,6], 16→[11,11], 32→[19,19]
+    assert s.cache_hits == s.batches - s.compiles
+    assert s.padded_rows == 2              # one unused row each in 16 and 32
+
+
+def test_service_cache_hits_across_drains(policy):
+    params, cfg = policy
+    svc = GraphSolverService(params, cfg, max_batch=2)
+    for round_ in range(2):
+        svc.submit(erdos_renyi(10, 0.3, seed=round_))
+        svc.drain()
+    assert svc.stats.compiles == 1 and svc.stats.cache_hits == 1
+
+
+def test_service_sparse_pins_bucket_shapes(policy):
+    """Sparse traffic must not retrace per max-degree: the neighbor-list
+    width is pinned per bucket, so a low-degree then a high-degree graph in
+    the same bucket reuse one compiled step."""
+    import dataclasses
+    params, cfg = policy
+    svc = GraphSolverService(params, dataclasses.replace(
+        cfg, graph_rep="sparse"), max_batch=2)
+    (r1,) = svc.serve([erdos_renyi(10, 0.15, seed=1)])
+    a2 = erdos_renyi(12, 0.6, seed=2)          # same bucket, higher degree
+    (r2,) = svc.serve([a2])
+    assert r1.bucket == r2.bucket == 16
+    assert svc.stats.compiles == 1 and svc.stats.cache_hits == 1
+    keep = r2.solution < 0.5
+    assert a2[np.ix_(keep, keep)].sum() == 0
+
+
+def test_drain_requeues_on_failure(policy):
+    """A failing dispatch must not lose requests or completed responses:
+    unserved requests return to the queue, served ones are held over."""
+    params, cfg = policy
+    svc = GraphSolverService(params, cfg, max_batch=1)
+    i0 = svc.submit(erdos_renyi(9, 0.3, seed=0))
+    i1 = svc.submit(erdos_renyi(9, 0.3, seed=1))
+    orig, calls = svc._dispatch, []
+
+    def flaky(plan):
+        if calls:
+            raise RuntimeError("boom")
+        calls.append(1)
+        return orig(plan)
+
+    svc._dispatch = flaky
+    with pytest.raises(RuntimeError):
+        svc.drain()
+    assert svc.pending() == 1              # failed batch back on the queue
+    svc._dispatch = orig
+    results = svc.drain()                  # retried + held-over response
+    assert set(results) == {i0, i1}
+
+
+def test_service_maxcut(policy):
+    params, cfg = policy
+    svc = GraphSolverService(params, cfg, max_batch=2)
+    adj = erdos_renyi(12, 0.3, seed=4)
+    (resp,) = svc.serve([adj], problem="maxcut")
+    assert resp.problem == "maxcut"
+    assert (resp.solution == (adj.sum(-1) > 0)).all()
+
+
+def test_policy_checkpoint_round_trip(tmp_path, policy):
+    """The RL checkpoint wiring: params saved by the training driver load
+    back bit-identically and serve the same solutions, both via load_policy
+    and via GraphSolverService.from_checkpoint."""
+    params, cfg = policy
+    save_policy(tmp_path, 7, params)
+    restored, step = load_policy(tmp_path, cfg)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype and (np.asarray(a) == np.asarray(b)).all()
+
+    adj = erdos_renyi(14, 0.25, seed=9)
+    ref = solve(params, pad_adjacency(adj, 16)[None],
+                num_layers=cfg.num_layers, multi_node=True)
+    svc = GraphSolverService.from_checkpoint(tmp_path, cfg, max_batch=1)
+    (resp,) = svc.serve([adj])
+    assert resp.size == int(ref.sizes[0])
+    assert (resp.solution == ref.solution[0, :14]).all()
