@@ -3,7 +3,10 @@
 Validates the paper's claims that (a) parallel efficiency of both the
 embedding evaluation and the action evaluation is ≈1.0 for P ≪ N, and
 (b) the distributed data structures' per-device memory scales as 1/P with
-the replay buffer storing O(N/P) per tuple, not O(N²/P).
+the replay buffer storing O(N/P) per tuple, not O(N²/P) — and surfaces
+the model's 2-D mesh generalization (DESIGN.md §10): at a fixed global
+batch, per-device state divides by dp·sp and replay by dp with O(N/sp)
+masks per tuple.
 """
 from __future__ import annotations
 
@@ -15,9 +18,10 @@ def run(quick: bool = False):
                                      efficiency_embed_closed,
                                      efficiency_action_closed,
                                      memory_per_device)
+    from repro.core.mesh import per_device_bytes
     from repro.core.replay import ReplayBuffer
 
-    rows, results = [], {"efficiency": {}, "memory": {}}
+    rows, results = [], {"efficiency": {}, "memory": {}, "memory_2d": {}}
     n, rho, k, l = 21_000, 0.15, 32, 2
     for p in (1, 2, 4, 6, 16, 64):
         e_t = efficiency_embed(1, n, rho, k, l, p) if p > 1 else 1.0
@@ -35,6 +39,18 @@ def run(quick: bool = False):
         rows.append((f"memory_model_p{p}", 0.0,
                      f"adj {m['adjacency_bytes']/2**30:.2f}GiB "
                      f"replay {m['replay_bytes']/2**30:.2f}GiB"))
+
+    # 2-D mesh generalization: (dp, sp) grid at a fixed global batch B=8
+    b2d = 8
+    for dp, sp in ((1, 1), (2, 1), (1, 2), (2, 2), (2, 4), (4, 4)):
+        m = per_device_bytes(n=n, b=b2d, rho=rho, p=sp,
+                             replay_tuples=50_000, dp=dp)
+        total = sum(m.values())
+        results["memory_2d"][f"{dp}x{sp}"] = dict(m, total=total)
+        rows.append((f"memory_2d_{dp}x{sp}", 0.0,
+                     f"adj {m['adjacency']/2**30:.2f}GiB replay "
+                     f"{m['replay']/2**30:.2f}GiB total "
+                     f"{total/2**30:.2f}GiB"))
 
     # actual compressed replay buffer footprint vs §5.2 model (P=1)
     rb = ReplayBuffer(capacity=1000, num_nodes=n)

@@ -1,0 +1,195 @@
+"""2-D (data, graph) mesh scaling: fused train step and fused solve wall
+time plus MEASURED per-device memory across (dp, sp) ∈ {(1,1), (2,1),
+(1,2), (2,2)} at a fixed global batch (DESIGN.md §10).
+
+Each mesh shape runs in a subprocess with a forced 4-device CPU topology
+(same mechanism as the spatial equivalence tests); on this container the
+wall times measure collective/partitioning overhead rather than real
+scaling, but the per-device byte counts are real: the replay ring buffer
+and the solve-state arrays are placed with the mesh shardings and their
+addressable shard sizes recorded — peak per-device state bytes must fall
+with dp at fixed global batch (the acceptance claim), and mask/neighbor
+rows with sp.  The §5.2 analytic model at the same shape is saved
+alongside for comparison.
+
+JSON → experiments/bench/mesh_scaling.json.
+
+  PYTHONPATH=src python -m benchmarks.mesh_scaling [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from .common import save
+
+MESHES = ((1, 1), (2, 1), (1, 2), (2, 2))
+
+
+def _shard_nbytes(tree) -> int:
+    """Per-device bytes of a pytree of sharded jax arrays (shard 0)."""
+    import jax
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "addressable_shards"):
+            total += leaf.addressable_shards[0].data.nbytes
+    return total
+
+
+def _measure_mesh(dp: int, sp: int, *, n: int, graphs: int, batch: int,
+                  steps: int, warm: int, solve_batch: int) -> dict:
+    """Seconds per fused train step / per fused solve + measured per-device
+    bytes on the (dp, sp) mesh.  Runs inside the forced-device child."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (Agent, PolicyConfig, get_rep, mesh_from_spec,
+                            shard_state, solve)
+    from repro.core.engine import engine_init, get_train_step
+    from repro.core.graphs import random_graph_batch
+    from repro.core.mesh import per_device_bytes
+
+    spec = 0 if (dp, sp) == (1, 1) else (dp, sp)
+    rho = 0.2
+    adj = random_graph_batch("er", n, graphs, seed=0, rho=rho)
+    cfg = PolicyConfig(embed_dim=16, num_layers=2, minibatch=32,
+                       replay_capacity=2048, learning_rate=1e-3,
+                       eps_decay_steps=200, spatial=spec)
+    agent = Agent(cfg, num_nodes=n)
+    rep = get_rep(cfg.graph_rep)
+    source = rep.prepare_dataset(adj)
+    mesh = mesh_from_spec(spec)
+    # the fused step donates the carry (incl. agent.params' buffers) —
+    # keep an undonated copy for the solve half of the measurement
+    params = jax.tree.map(jnp.copy, agent.params)
+
+    # -- fused train step ---------------------------------------------------
+    fused = get_train_step(cfg, rep=rep, tau=1, target_mode="fresh")
+    es = engine_init(cfg, agent.params, agent.opt, n, seed=0, mesh=mesh)
+    gi = np.arange(batch) % graphs
+    gi_dev = jnp.asarray(gi, jnp.int32)
+    zeros = np.zeros((batch, n), np.float32)
+    state = rep.state_from_tuples(source, gi, zeros)
+    for _ in range(warm):
+        es, state, _a, _r, done, loss = fused(es, state, source, gi_dev)
+        _l, done = jax.device_get((loss, done))
+        if done.all():
+            state = rep.state_from_tuples(source, gi, zeros)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        es, state, _a, _r, done, loss = fused(es, state, source, gi_dev)
+        _l, done = jax.device_get((loss, done))
+        if done.all():
+            state = rep.state_from_tuples(source, gi, zeros)
+    train_s = (time.perf_counter() - t0) / steps
+    replay_dev_bytes = _shard_nbytes(es.replay)
+
+    # -- fused solve --------------------------------------------------------
+    solve_adj = random_graph_batch("er", n, solve_batch, seed=7, rho=rho)
+    kw = dict(num_layers=2, multi_node=True, engine="device", spatial=spec)
+    solve(params, solve_adj, **kw)                         # compile
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        res = solve(params, solve_adj, **kw)
+    solve_s = (time.perf_counter() - t0) / reps
+
+    # -- measured per-device state bytes at fixed global batch --------------
+    st = rep.init_state(jnp.asarray(solve_adj))
+    if mesh is not None:
+        st = shard_state(mesh, st)
+    state_dev_bytes = _shard_nbytes(st)
+    if mesh is None:                       # single device: full arrays
+        state_dev_bytes = int(sum(x.nbytes for x in jax.tree.leaves(st)))
+        replay_dev_bytes = es.replay.nbytes()
+
+    model = per_device_bytes(n=n, b=solve_batch, rho=rho, p=sp,
+                             replay_tuples=cfg.replay_capacity, dp=dp)
+    return {
+        "train_s_per_step": train_s,
+        "solve_s": solve_s,
+        "solve_evals": int(res.policy_evals),
+        "state_bytes_per_device": int(state_dev_bytes),
+        "replay_bytes_per_device": int(replay_dev_bytes),
+        "model_bytes_per_device": model,
+    }
+
+
+def run(quick: bool = False):
+    n, graphs = (24, 4) if quick else (48, 8)
+    steps, warm = (12, 20) if quick else (40, 30)
+    batch, solve_batch = 4, 8
+
+    results = {"config": {"n": n, "graphs": graphs, "batch": batch,
+                          "solve_batch": solve_batch, "steps": steps,
+                          "minibatch": 32, "embed_dim": 16,
+                          "quick": quick, "meshes": list(MESHES)}}
+    child_env = dict(os.environ, JAX_PLATFORMS="cpu",
+                     XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                     PYTHONPATH=os.pathsep.join(
+                         ["src", os.environ.get("PYTHONPATH", "")]).rstrip(
+                             os.pathsep))
+    for dp, sp in MESHES:
+        spec = json.dumps({"dp": dp, "sp": sp, "n": n, "graphs": graphs,
+                           "batch": batch, "steps": steps, "warm": warm,
+                           "solve_batch": solve_batch})
+        child = subprocess.run(
+            [sys.executable, "-m", "benchmarks.mesh_scaling",
+             "--child", spec],
+            capture_output=True, text=True, env=child_env, timeout=1200)
+        key = f"{dp}x{sp}"
+        if child.returncode == 0:
+            try:
+                results[key] = json.loads(
+                    child.stdout.strip().splitlines()[-1])
+            except (IndexError, json.JSONDecodeError):
+                results[key] = {"error": "no JSON payload on child stdout: "
+                                + (child.stdout + child.stderr)[-800:]}
+        else:                              # record, don't hide, failures
+            results[key] = {"error": child.stderr[-1000:]}
+
+    save("mesh_scaling", results)
+    failed = [f"{dp}x{sp}" for dp, sp in MESHES
+              if "error" in results[f"{dp}x{sp}"]]
+    if failed:
+        # JSON (incl. stderr tails) is already on disk for debugging;
+        # fail loudly so bench-smoke CI can't go green on a broken mesh.
+        raise RuntimeError(
+            f"mesh shapes {failed} failed — see "
+            f"experiments/bench/mesh_scaling.json: "
+            + " | ".join(results[k]["error"][-200:] for k in failed))
+    rows = []
+    for dp, sp in MESHES:
+        r = results[f"{dp}x{sp}"]
+        rows.append((
+            f"mesh_{dp}x{sp}",
+            r["train_s_per_step"] * 1e6,
+            f"train {r['train_s_per_step']*1e3:.1f}ms/step solve "
+            f"{r['solve_s']*1e3:.1f}ms state/dev "
+            f"{r['state_bytes_per_device']/1024:.1f}KiB replay/dev "
+            f"{r['replay_bytes_per_device']/1024:.1f}KiB"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--child", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child:
+        spec = json.loads(args.child)
+        print(json.dumps(_measure_mesh(
+            spec["dp"], spec["sp"], n=spec["n"], graphs=spec["graphs"],
+            batch=spec["batch"], steps=spec["steps"], warm=spec["warm"],
+            solve_batch=spec["solve_batch"])))
+        return
+    for name, us, derived in run(quick=args.quick):
+        print(f'{name},{us:.1f},"{derived}"')
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
   §5     efficiency_model     kernels  kernel_bench
   §5.2   sparse_vs_dense (GraphRep backend memory/latency)
   §8/§9  train_step_scaling / inference_step_scaling (fused engines)
+  §10    mesh_scaling (2-D (data, graph) mesh: time + per-device bytes)
 """
 from __future__ import annotations
 
@@ -26,7 +27,7 @@ def main() -> None:
     from . import (learning_speed, multinode_selection, gd_iterations,
                    scaling, efficiency_model, kernel_bench,
                    roofline_summary, sparse_vs_dense, train_step_scaling,
-                   inference_step_scaling)
+                   inference_step_scaling, mesh_scaling)
     modules = {
         "learning_speed": learning_speed,
         "multinode_selection": multinode_selection,
@@ -38,6 +39,7 @@ def main() -> None:
         "sparse_vs_dense": sparse_vs_dense,
         "train_step_scaling": train_step_scaling,
         "inference_step_scaling": inference_step_scaling,
+        "mesh_scaling": mesh_scaling,
     }
     if args.only:
         keep = set(args.only.split(","))

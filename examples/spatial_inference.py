@@ -1,26 +1,29 @@
-"""Spatial parallelism demo (paper §4.1 + Alg. 4): one graph's state
-partitioned across P devices — on BOTH GraphRep backends.
+"""2-D mesh parallelism demo (paper §4.1 + Alg. 4, DESIGN.md §10): a batch
+of graphs partitioned across devices on BOTH mesh axes — batch rows over
+``data``, node rows over ``graph`` — on BOTH GraphRep backends.
 
-Run with forced host devices to see the P-way partitioned policy evaluation
+Run with forced host devices to see the mesh-partitioned policy evaluation
 produce bit-identical scores to the single-device path:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/spatial_inference.py
 
-The dense path shards (B, N/P, N) adjacency row blocks; the sparse path
-shards the (B, N/P, D) padded neighbor-list rows — the paper's distributed
-sparse graph storage (§5.2), O(N·maxdeg/P) per device instead of O(N²/P).
+With 4+ devices the demo builds the (2, P/2) mesh: each device holds the
+(B/2, N/(P/2), N) dense row block / (B/2, N/(P/2), D) sparse neighbor-list
+block of its (data, graph) tile.  With fewer devices it falls back to the
+paper's 1-D node sharding (1, P).
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import (PolicyConfig, init_policy, init_state,
-                        policy_scores, random_graph_batch, make_graph_mesh,
-                        spatial_scores_fn, sparse_spatial_scores_fn,
-                        shard_graph_arrays, shard_sparse_arrays, SPARSE)
+                        policy_scores, random_graph_batch, make_mesh,
+                        mesh_shape, spatial_scores_fn,
+                        sparse_spatial_scores_fn, shard_graph_arrays,
+                        shard_sparse_arrays, SPARSE)
 from repro.core.analysis import collective_bytes_per_step
-from repro.core.spatial import per_device_bytes, sparse_per_device_bytes
+from repro.core.mesh import per_device_bytes, sparse_per_device_bytes
 
 
 def main():
@@ -34,19 +37,24 @@ def main():
     ref = policy_scores(params, st.adj, st.solution, st.candidate,
                         num_layers=2)
 
-    mesh = make_graph_mesh(p)
+    # 2-D (data, graph) mesh when the batch can split; 1-D otherwise.
+    dp = 2 if (p >= 4 and b % 2 == 0) else 1
+    mesh = make_mesh(dp, p // dp)
+    print(f"mesh: data={mesh_shape(mesh)[0]} graph={mesh_shape(mesh)[1]} "
+          f"(B/dp={b // mesh_shape(mesh)[0]} graphs, "
+          f"N/sp={n // mesh_shape(mesh)[1]} node rows per device)")
 
-    # -- dense backend: (B, N/P, N) adjacency row blocks --------------------
+    # -- dense backend: (B/dp, N/sp, N) adjacency row tiles -----------------
     scorer = spatial_scores_fn(mesh, num_layers=2)
     a, s, c = shard_graph_arrays(mesh, st.adj, st.solution, st.candidate)
     out = scorer(params, a, s, c)
     diff = float(jnp.abs(ref - out).max())
     per_dev = a.addressable_shards[0].data.shape
-    print(f"[dense ] P={p} spatially-partitioned scores vs single device: "
+    print(f"[dense ] mesh-partitioned scores vs single device: "
           f"max|Δ| = {diff:.2e}; per-device block {per_dev} "
-          f"(paper Fig. 2: B × N/P × N)")
+          f"(paper Fig. 2 generalized: B/dp × N/sp × N)")
 
-    # -- sparse backend: (B, N/P, D) neighbor-list rows ---------------------
+    # -- sparse backend: (B/dp, N/sp, D) neighbor-list tiles ----------------
     sst = SPARSE.init_state(adj)
     sparse_scorer = sparse_spatial_scores_fn(mesh, num_layers=2)
     nb, va, so, ca = shard_sparse_arrays(mesh, sst.neighbors, sst.valid,
@@ -54,17 +62,19 @@ def main():
     sout = sparse_scorer(params, nb, va, so, ca)
     sdiff = float(jnp.abs(ref - sout).max())
     sper_dev = nb.addressable_shards[0].data.shape
-    print(f"[sparse] P={p} distributed sparse storage scores vs dense ref:  "
+    print(f"[sparse] distributed sparse storage scores vs dense ref:  "
           f"max|Δ| = {sdiff:.2e}; per-device neighbor block {sper_dev} "
-          f"(paper §4.1: B × N/P × maxdeg)")
+          f"(paper §4.1 generalized: B/dp × N/sp × maxdeg)")
 
-    dmem = per_device_bytes(n=n, b=b, rho=0.15, p=p)
-    smem = sparse_per_device_bytes(n=n, max_deg=sst.max_degree, b=b, p=p)
+    mdp, msp = mesh_shape(mesh)
+    dmem = per_device_bytes(n=n, b=b, rho=0.15, p=msp, dp=mdp)
+    smem = sparse_per_device_bytes(n=n, max_deg=sst.max_degree, b=b, p=msp,
+                                   dp=mdp)
     print(f"per-device adjacency bytes — paper COO model: "
           f"{dmem['adjacency']:.0f}B, padded edge lists: "
           f"{smem['adjacency']:.0f}B")
-    cb = collective_bytes_per_step(b=b, n=n, k=32, l=2, p=p)
-    print("collectives per policy eval (paper §5.1):",
+    cb = collective_bytes_per_step(b=b // mdp, n=n, k=32, l=2, p=msp)
+    print("collectives per policy eval, per data slice (paper §5.1):",
           {k: f"{v:.0f}B" for k, v in cb.items()})
 
 

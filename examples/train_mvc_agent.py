@@ -12,7 +12,7 @@ import argparse
 import numpy as np
 
 from repro.core import (Agent, PolicyConfig, train_agent, evaluate_quality,
-                        solve)
+                        parse_spatial, solve)
 from repro.core.graphs import random_graph_batch
 from repro.core.solvers import (greedy_mvc_batch, matching_2approx_batch,
                                 reference_sizes)
@@ -35,9 +35,13 @@ def main():
     ap.add_argument("--engine", choices=["device", "host"], default="device",
                     help="training engine (DESIGN.md §8): 'device' fuses "
                          "act→step→remember→τ×GD into one jitted call")
-    ap.add_argument("--spatial", type=int, default=0,
-                    help="P-way spatial sharding of the GD loss/grad "
-                         "(paper Alg. 5); 0 → single device")
+    ap.add_argument("--spatial", default="0",
+                    help="2-D (data, graph) mesh spec (DESIGN.md §10): "
+                         "'dp,sp' shards episode/minibatch rows dp ways "
+                         "over the data axis and node rows sp ways over "
+                         "the graph axis (paper Alg. 5 generalized); a "
+                         "bare int P means the legacy node sharding "
+                         "(1, P); 0 → single device")
     ap.add_argument("--ckpt-dir", default=None,
                     help="save the trained policy params here "
                          "(repro.checkpoint format; load with "
@@ -54,7 +58,8 @@ def main():
     cfg = PolicyConfig(embed_dim=args.embed_dim, num_layers=2, minibatch=64,
                        replay_capacity=10_000, learning_rate=args.lr,
                        eps_decay_steps=args.steps // 2, graph_rep=args.rep,
-                       engine=args.engine, spatial=args.spatial)
+                       engine=args.engine,
+                       spatial=parse_spatial(args.spatial))
     agent = Agent(cfg, num_nodes=args.nodes)
 
     curve = []

@@ -8,7 +8,7 @@ variant (≤2 layers, d_model ≤ 512, ≤4 experts) of the same family.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,7 +146,10 @@ class GraphRepConfig:
     """
     rep: str = "dense"               # "dense" (B,N,N) | "sparse" (B,N,D)
     max_degree: int = 0              # sparse: 0 → derive from the graph batch
-    spatial: int = 0                 # P-way node sharding, 0 → single device
+    # 2-D (data, graph) mesh spec (DESIGN.md §10): (dp, sp) tuple shards
+    # batches over `data` and node rows over `graph`; legacy int P ⇒ (1, P);
+    # 0 ⇒ single device.
+    spatial: Union[int, Tuple[int, int]] = 0
     engine: str = "device"           # training engine: "device" | "host"
 
     def __post_init__(self):

@@ -29,6 +29,11 @@ from .engine import (EngineState, engine_init, get_train_step,
 from .inference import (solve, solve_with_config, adaptive_d, select_top_d,
                         init_solve_state, InferenceResult)
 from .training import train_agent, evaluate_quality, TrainLog
+from .mesh import (DATA, GRAPH, make_mesh, mesh_from_spec, mesh_shape,
+                   normalize_spatial, is_multi, parse_spatial,
+                   shard_state, constrain_batch,
+                   shard_replay, constrain_replay,
+                   per_device_bytes, sparse_per_device_bytes)
 from .spatial import (make_graph_mesh, spatial_scores_fn,
                       sparse_spatial_scores_fn, spatial_solve_scores_fn,
                       spatial_train_minibatch_fn,

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from .graphs import GraphState, SparseGraphBatch
 from .graphrep import DENSE, SPARSE, GraphRep, get_rep, rep_for_state
+from .mesh import is_multi
 from .policy import PolicyConfig, PolicyParams, init_policy, policy_scores
 from .qmodel import NEG_INF
 from .replay import ReplayBuffer, tuples_to_graphs
@@ -113,13 +114,15 @@ class Agent:
         self._spatial_fn = None
 
     def _spatial_minibatch(self):
-        """Cached P-way spatial GD step (paper Alg. 5 lockstep; DESIGN.md
-        §8) over ``cfg.spatial`` devices; dispatches on state type."""
+        """Cached mesh-parallel GD step (paper Alg. 5 lockstep, 2-D mesh;
+        DESIGN.md §8/§10) on ``cfg.spatial``'s ``(dp, sp)`` device mesh;
+        dispatches on state type."""
         if self._spatial_fn is None:
-            from .spatial import make_graph_mesh, spatial_train_minibatch_fn
-            mesh = make_graph_mesh(self.cfg.spatial)
+            from .mesh import mesh_from_spec
+            from .spatial import spatial_train_minibatch_fn
             self._spatial_fn = spatial_train_minibatch_fn(
-                mesh, num_layers=self.cfg.num_layers,
+                mesh_from_spec(self.cfg.spatial),
+                num_layers=self.cfg.num_layers,
                 lr=self.cfg.learning_rate)
         return self._spatial_fn
 
@@ -197,7 +200,7 @@ class Agent:
                                   num_layers=self.cfg.num_layers)
                 tgt = rew + self.cfg.gamma * np.asarray(nxt) * (1.0 - done)
             st = rep.state_from_tuples(source, gi, sol, residual=residual)
-            if self.cfg.spatial:
+            if is_multi(self.cfg.spatial):
                 self.params, self.opt, l = self._spatial_minibatch()(
                     self.params, self.opt, st,
                     jnp.asarray(act), jnp.asarray(tgt))

@@ -16,9 +16,10 @@ step runs the whole cycle on device in a single jitted call (DESIGN.md §8):
 5. a ``lax.scan`` over τ GD iterations (§4.5.2) whose body samples the
    buffer, re-materializes states with Tuples2Graphs
    (``GraphRep.state_from_tuples``, Alg. 5 line 21) and applies one Adam
-   update — optionally under the P-way spatial shard_map path
-   (``spatial_train_minibatch_fn``) with a gradient psum over the ``graph``
-   mesh axis (Alg. 5's P-GPU lockstep, collapsed to SPMD per DESIGN.md §2).
+   update — optionally under the 2-D ``(data, graph)`` mesh
+   (``spatial_train_minibatch_fn``): minibatch rows sharded over ``data``,
+   node rows over ``graph``, loss/gradients psum-ed over BOTH axes
+   (Alg. 5's P-GPU lockstep generalized, DESIGN.md §10).
 
 Everything is representation-polymorphic: both GraphRep backends and both
 target modes flow through the same step.  ``train_agent`` drives episodes
@@ -51,6 +52,8 @@ from . import env as env_lib
 from .agent import max_q_raw, train_minibatch_raw
 from .graphrep import GraphRep, get_rep
 from .inference import select_top_d
+from .mesh import (MeshSpec, constrain_batch, constrain_replay, make_mesh,
+                   normalize_spatial, shard_replay)
 from .policy import PolicyConfig, PolicyParams
 from .qmodel import NEG_INF
 from .replay import (DeviceReplay, device_replay_init, device_replay_push,
@@ -70,11 +73,17 @@ class EngineState:
 
 
 def engine_init(cfg: PolicyConfig, params: PolicyParams, opt: AdamState,
-                num_nodes: int, *, seed: int = 0,
-                step_count: int = 0) -> EngineState:
+                num_nodes: int, *, seed: int = 0, step_count: int = 0,
+                mesh=None) -> EngineState:
+    """Fresh training carry.  With ``mesh`` (the cfg's 2-D device mesh)
+    the replay ring buffer is placed sharded from step 0 — tuple rows over
+    ``data``, S masks over ``(data, graph)`` — so the first fused step
+    donates mesh-resident buffers instead of resharding them."""
+    replay = device_replay_init(cfg.replay_capacity, num_nodes)
+    if mesh is not None:
+        replay = shard_replay(mesh, replay)
     return EngineState(
-        params=params, opt=opt,
-        replay=device_replay_init(cfg.replay_capacity, num_nodes),
+        params=params, opt=opt, replay=replay,
         rng=jax.random.key(seed),
         step_count=jnp.asarray(step_count, jnp.int32),
     )
@@ -100,13 +109,22 @@ def get_train_step(cfg: PolicyConfig, *,
     Returns ``step(es, state, source, graph_idx) -> (es', state', action,
     reward, done, loss)``.  ``source`` is the device-resident training
     dataset in ``rep``'s layout; ``graph_idx`` the (B,) episode graph ids.
-    With ``cfg.spatial`` = P > 0 the GD loss/grad runs under shard_map on
-    the (B, N/P, ·) layout (N must divide by P) with a gradient psum over
-    the ``graph`` axis; acting and target bootstraps stay replicated.
+    ``cfg.spatial`` selects the 2-D ``(data, graph)`` mesh (DESIGN.md
+    §10; an int P back-compats to ``(1, P)``): acting, env transitions
+    and replay run with the episode batch sharded over ``data``
+    (bit-identical per-graph arithmetic), the GD loss/grad runs under
+    shard_map on the (B/dp, N/sp, ·) tiled layout (minibatch must divide
+    by dp, N by sp) with loss and gradients psum-ed over BOTH axes, and
+    the replay ring buffer shards its tuple rows over ``data`` and its
+    O(N) masks over ``(data, graph)``.
     """
     rep = get_rep(rep if rep is not None else cfg.graph_rep)
     tau = cfg.grad_iters if tau is None else tau
     assert target_mode in ("fresh", "stored"), target_mode
+    dp, _sp = normalize_spatial(cfg.spatial)
+    if cfg.minibatch % dp:
+        raise ValueError(f"minibatch {cfg.minibatch} not divisible by the "
+                         f"data-axis size {dp} of mesh spec {cfg.spatial!r}")
     return _build_train_step(cfg, rep, problem, tau, target_mode, explore)
 
 
@@ -119,12 +137,14 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
     minibatch, lr = cfg.minibatch, cfg.learning_rate
     stored = target_mode == "stored"
 
-    if cfg.spatial:
-        from .spatial import make_graph_mesh, spatial_train_minibatch_fn
-        gd_step = spatial_train_minibatch_fn(
-            make_graph_mesh(cfg.spatial), num_layers=num_layers,
-            lr=lr, jit=False)
+    dp, sp = normalize_spatial(cfg.spatial)
+    if (dp, sp) != (1, 1):
+        from .spatial import spatial_train_minibatch_fn
+        mesh = make_mesh(dp, sp)
+        gd_step = spatial_train_minibatch_fn(mesh, num_layers=num_layers,
+                                             lr=lr, jit=False)
     else:
+        mesh = None
         gd_step = functools.partial(train_minibatch_raw, rep=rep,
                                     num_layers=num_layers, lr=lr)
 
@@ -135,6 +155,11 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def train_step(es: EngineState, state, source, graph_idx):
+        if mesh is not None:
+            # Graph-level batch parallelism: the episode batch lives B/dp
+            # per device (per-graph rows stay whole, so acting and the env
+            # transition are bit-identical to the single-device path).
+            state = constrain_batch(mesh, state)
         b = state.candidate.shape[0]
         rng, k_eps, k_pick, k_train = jax.random.split(es.rng, 4)
 
@@ -161,6 +186,10 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
         replay = device_replay_push(es.replay, graph_idx, state.solution,
                                     action, target, reward,
                                     new_state.solution, done)
+        if mesh is not None:
+            # §5.2 generalized: tuple rows over `data`, S masks over
+            # (data, graph) — per-device replay 8·R·(N/sp + 1)/dp bytes.
+            replay = constrain_replay(mesh, replay)
 
         # -- τ GD iterations (Alg. 5 lines 15-23, §4.5.2) ------------------
         def do_train(carry):
@@ -211,42 +240,56 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
 
 def get_solve_step(*, rep: Union[str, GraphRep, None] = None,
                    problem: str = "mvc", num_layers: int = 2,
-                   use_adaptive: bool = False, spatial: int = 0):
+                   use_adaptive: bool = False, spatial: MeshSpec = 0):
     """Build (and cache) the fused device-resident solve for a configuration.
 
     Returns ``solve_fn(params, state, max_evals) -> (solution, evals,
     committed)`` — the ENTIRE Alg. 4 loop (score → top-d commit → done
     check) as one jitted ``lax.while_loop`` with no per-eval host traffic;
     the caller's single result fetch is the solve's only host↔device sync.
-    ``spatial`` = P > 0 partitions every policy evaluation P-way under
-    shard_map (dense row blocks / sparse neighbor-list rows; same per-eval
-    collectives as the host spatial path, DESIGN.md §3), with the commit
-    running replicated like the paper's Fig. 4 lockstep argmax.
+    ``spatial`` selects the 2-D ``(data, graph)`` mesh (an int P
+    back-compats to ``(1, P)``, DESIGN.md §10): the while_loop runs with
+    the batch sharded over ``data`` — B/dp graphs per device, the done
+    check reduced over the mesh — and each policy evaluation partitioned
+    sp-way under shard_map (dense row blocks / sparse neighbor-list rows;
+    same per-eval collectives as the 1-D spatial path, DESIGN.md §3),
+    with the top-d commit running data-parallel in the paper's Fig. 4
+    lockstep.
     """
     rep = get_rep(rep)
     return _build_solve_step(rep, problem, num_layers, bool(use_adaptive),
-                             int(spatial))
+                             normalize_spatial(spatial))
 
 
 @functools.lru_cache(maxsize=64)
 def _build_solve_step(rep: GraphRep, problem: str, num_layers: int,
-                      use_adaptive: bool, spatial: int):
+                      use_adaptive: bool, spatial: tuple):
     commit_fn = env_lib.commit_rule(problem)
-    if spatial:
-        from .spatial import make_graph_mesh, spatial_solve_scores_fn
+    dp, sp = spatial
+    if (dp, sp) != (1, 1):
+        from .spatial import spatial_solve_scores_fn
+        mesh = make_mesh(dp, sp)
         score_fn = spatial_solve_scores_fn(
-            make_graph_mesh(spatial), num_layers=num_layers, rep=rep,
+            mesh, num_layers=num_layers, rep=rep,
             residual=env_lib.residual_semantics(problem))
     else:
+        mesh = None
+
         def score_fn(params, state):
             return rep.scores(params, state, num_layers=num_layers)
 
     @jax.jit
     def solve_fn(params, state, max_evals):
+        if mesh is not None:
+            # B/dp graphs per device through the whole while_loop; the
+            # spatial scorer retiles node rows over `graph` per eval.
+            state = constrain_batch(mesh, state)
         b = state.candidate.shape[0]
 
         def cond(carry):
             _state, evals, _committed, done = carry
+            # `done` is data-sharded with the batch: the all() is the
+            # done-check reduction over the mesh.
             return jnp.logical_and(~done.all(), evals < max_evals)
 
         def body(carry):

@@ -114,7 +114,7 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
           multi_node: bool = False, max_evals: Optional[int] = None,
           step_fn: Optional[Callable] = None,
           rep: Union[str, GraphRep] = "dense", problem: str = "mvc",
-          engine: str = "device", spatial: int = 0) -> InferenceResult:
+          engine: str = "device", spatial=0) -> InferenceResult:
     """Run Alg. 4 until every graph in the batch has a complete solution.
 
     multi_node=False reproduces the original d=1 algorithm; True enables the
@@ -123,18 +123,26 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
     ``problem`` the registered environment whose commit/termination rule
     drives the loop; ``engine`` the execution engine ("device" = fused
     jitted while_loop, one host sync per solve; "host" = per-eval loop);
-    ``spatial`` > 0 partitions every policy evaluation P-way under
-    shard_map (device engine only).  ``step_fn`` may override the jitted
-    step (host engine only; kept for custom drivers).
+    ``spatial`` selects the 2-D ``(data, graph)`` mesh — ``(dp, sp)``
+    shards the batch dp ways over ``data`` (B/dp graphs per device) and
+    partitions every policy evaluation sp-way under shard_map; an int P
+    back-compats to ``(1, P)`` (device engine only, DESIGN.md §10).
+    ``step_fn`` may override the jitted step (host engine only; kept for
+    custom drivers).
     """
+    from .mesh import normalize_spatial
     if engine not in ("host", "device"):
         raise ValueError(f"unknown inference engine {engine!r}")
     rep = get_rep(rep)
     state = init_solve_state(rep, adj0, problem)
     n = state.num_nodes
     max_evals = max_evals or (n + MAX_D)
+    dp, _sp = normalize_spatial(spatial)
 
     if engine == "device" and step_fn is None:
+        if state.batch % dp:
+            raise ValueError(f"batch {state.batch} not divisible by the "
+                             f"data-axis size {dp} of mesh spec {spatial!r}")
         from .engine import get_solve_step
         fused = get_solve_step(rep=rep, problem=problem,
                                num_layers=num_layers,
@@ -146,7 +154,7 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
                                sizes=sol.sum(-1).astype(np.int64),
                                policy_evals=int(evals),
                                nodes_committed=committed.astype(np.int64))
-    if spatial:
+    if (dp, _sp) != (1, 1):
         raise ValueError("spatial solve runs on the fused path only; it is "
                          "incompatible with engine='host' and with step_fn "
                          "overrides")

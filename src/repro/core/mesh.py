@@ -1,0 +1,214 @@
+"""2-D ``(data, graph)`` device mesh and the single partitioning layer
+every multi-device consumer dispatches through (DESIGN.md §10).
+
+The paper's scaling story composes two orthogonal axes:
+
+- **graph-level batch parallelism** (``data`` axis): B graphs — episodes,
+  replay minibatches, solve/serving batches — split dp ways, B/dp graphs
+  per device;
+- **node-level spatial parallelism** (``graph`` axis, paper §4.1): one
+  graph's N node rows split sp ways, N/sp resident rows per device, with
+  the per-layer collectives of Alg. 2-4.
+
+``make_mesh(dp, sp)`` builds the mesh; the PartitionSpec builders below
+are the ONE place that knows how each array of either GraphRep state (and
+the device replay buffer) lays out on it — batch dim sharded over
+``data``, node rows over ``graph``, everything else replicated:
+
+| array | dense | sparse |
+|---|---|---|
+| adjacency / neighbor lists | ``adj (B,N,N) → P(data, graph, None)`` | ``neighbors/valid (B,N,D) → P(data, graph, None)`` |
+| solution / candidate (B, N) | ``P(data, graph)`` | ``P(data, graph)`` |
+| scores out of a spatial eval | ``P(data)`` (replicated over ``graph`` post all-gather) | same |
+| replay tuples (R, ·) | rows over ``data``, S masks ``P(data, graph)`` | same |
+
+Back-compat rule: ``PolicyConfig.spatial`` historically was an int P
+meaning "P-way node sharding".  ``normalize_spatial`` keeps that contract
+— ``P`` ⇒ ``(1, P)``, ``0``/``None`` ⇒ ``(1, 1)`` (no mesh) — while a
+``(dp, sp)`` tuple selects the full 2-D mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DATA = "data"     # graph-level batch parallelism (B → B/dp per device)
+GRAPH = "graph"   # node-level spatial parallelism (N → N/sp per device)
+
+MeshSpec = Union[None, int, Tuple[int, int]]
+
+
+def normalize_spatial(spec: MeshSpec) -> Tuple[int, int]:
+    """``PolicyConfig.spatial`` value → ``(dp, sp)`` mesh shape.
+
+    Back-compat: an int P means the legacy 1-D node sharding ``(1, P)``;
+    ``0``/``None`` mean ``(1, 1)`` (single device, no mesh)."""
+    if spec is None:
+        return (1, 1)
+    if isinstance(spec, (tuple, list)):
+        if len(spec) != 2:
+            raise ValueError(f"mesh spec must be (dp, sp), got {spec!r}")
+        dp, sp = int(spec[0]), int(spec[1])
+        if dp < 1 or sp < 1:
+            raise ValueError(f"mesh spec components must be >= 1, "
+                             f"got {spec!r}")
+        return (dp, sp)
+    p = int(spec)
+    if p < 0:
+        raise ValueError(f"legacy spatial spec must be >= 0, got {spec!r}")
+    return (1, 1) if p == 0 else (1, p)
+
+
+def is_multi(spec: MeshSpec) -> bool:
+    """True when the spec selects any multi-device partitioning."""
+    return normalize_spatial(spec) != (1, 1)
+
+
+def parse_spatial(text: str) -> MeshSpec:
+    """CLI form → spec: ``"4"`` (legacy node sharding) or ``"dp,sp"``."""
+    text = text.strip()
+    if "," in text:
+        dp, sp = (int(t) for t in text.split(","))
+        return (dp, sp)
+    return int(text)
+
+
+@functools.lru_cache(maxsize=32)
+def make_mesh(dp: int = 1, sp: Optional[int] = None) -> jax.sharding.Mesh:
+    """The 2-D ``(data, graph)`` mesh over dp·sp devices.
+
+    ``sp=None`` spreads the remaining devices over the ``graph`` axis
+    (the legacy ``make_graph_mesh`` behaviour at dp=1)."""
+    from ..sharding.compat import auto_axis_types_kw
+    devs = jax.devices()
+    if sp is None:
+        sp = max(len(devs) // max(dp, 1), 1)
+    if dp * sp > len(devs):
+        raise ValueError(
+            f"mesh ({dp}, {sp}) needs {dp * sp} devices, have {len(devs)} "
+            f"(force more with XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={dp * sp})")
+    return jax.make_mesh((dp, sp), (DATA, GRAPH), **auto_axis_types_kw(2))
+
+
+def mesh_from_spec(spec: MeshSpec) -> Optional[jax.sharding.Mesh]:
+    """Spec → mesh, or None when the spec is single-device ``(1, 1)``."""
+    dp, sp = normalize_spatial(spec)
+    return None if (dp, sp) == (1, 1) else make_mesh(dp, sp)
+
+
+def mesh_shape(mesh: jax.sharding.Mesh) -> Tuple[int, int]:
+    """(dp, sp) of a 2-D mesh built by :func:`make_mesh`."""
+    return (mesh.shape[DATA], mesh.shape[GRAPH])
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec builders: the unified in/out specs for both GraphRep states.
+# ---------------------------------------------------------------------------
+
+# scores / per-tuple arrays: batch over `data`, replicated over `graph`
+SCORES_SPEC = P(DATA)
+TUPLE_SPEC = P(DATA)
+
+_DENSE_FIELD_SPECS = {"adj": P(DATA, GRAPH, None),
+                      "candidate": P(DATA, GRAPH),
+                      "solution": P(DATA, GRAPH)}
+_SPARSE_FIELD_SPECS = {"neighbors": P(DATA, GRAPH, None),
+                       "valid": P(DATA, GRAPH, None),
+                       "candidate": P(DATA, GRAPH),
+                       "solution": P(DATA, GRAPH)}
+
+# positional shard_map in_spec tuples, derived from the field tables above
+# (the single source of truth) — callers prepend the replicated P() spec
+# for params when building in_specs
+# (adj, solution, candidate) of the dense state:
+DENSE_STATE_SPECS = tuple(_DENSE_FIELD_SPECS[k]
+                          for k in ("adj", "solution", "candidate"))
+# (neighbors, valid, solution, candidate) of the sparse state:
+SPARSE_STATE_SPECS = tuple(_SPARSE_FIELD_SPECS[k]
+                           for k in ("neighbors", "valid", "solution",
+                                     "candidate"))
+_REPLAY_FIELD_SPECS = {"graph_idx": P(DATA), "solution": P(DATA, GRAPH),
+                       "action": P(DATA), "target": P(DATA),
+                       "reward": P(DATA), "next_solution": P(DATA, GRAPH),
+                       "done": P(DATA), "size": P(), "ptr": P()}
+
+
+def state_field_specs(state) -> dict:
+    """Field-name → PartitionSpec for a GraphRep state (dense or sparse)."""
+    from .graphs import SparseGraphState
+    return (_SPARSE_FIELD_SPECS if isinstance(state, SparseGraphState)
+            else _DENSE_FIELD_SPECS)
+
+
+def _apply(mesh, obj, specs, place):
+    kw = {name: place(getattr(obj, name), NamedSharding(mesh, spec))
+          for name, spec in specs.items()}
+    return dataclasses.replace(obj, **kw)
+
+
+def shard_state(mesh, state):
+    """Host-side placement of a GraphRep state onto the mesh partitioning
+    (batch over ``data``, node rows over ``graph``)."""
+    return _apply(mesh, state, state_field_specs(state), jax.device_put)
+
+
+def constrain_batch(mesh, state):
+    """Constrain ONLY the batch dim of every state array over ``data``.
+
+    This is the layout of replicated-per-node phases (acting, the fused
+    solve's commit/done bookkeeping): per-graph rows stay whole so their
+    arithmetic is bit-identical to the single-device path, while the batch
+    splits dp ways; the node axis is tiled over ``graph`` only inside the
+    spatial ``shard_map`` evaluations."""
+    specs = {name: P(DATA) for name in state_field_specs(state)}
+    return _apply(mesh, state, specs, jax.lax.with_sharding_constraint)
+
+
+def shard_replay(mesh, replay):
+    """Host-side placement of a DeviceReplay: tuple rows over ``data``,
+    the O(N) solution masks additionally over ``graph`` — per-device
+    replay storage 8·R·(N/sp + 1)/dp bytes (§5.2 generalized)."""
+    return _apply(mesh, replay, _REPLAY_FIELD_SPECS, jax.device_put)
+
+
+def constrain_replay(mesh, replay):
+    """jit-traceable ``with_sharding_constraint`` version of
+    :func:`shard_replay`."""
+    return _apply(mesh, replay, _REPLAY_FIELD_SPECS,
+                  jax.lax.with_sharding_constraint)
+
+
+# ---------------------------------------------------------------------------
+# §5.2 memory model generalized to the 2-D mesh: batch divided by dp, node
+# rows by sp, replay tuples by dp with O(N/sp) masks per tuple.
+# ---------------------------------------------------------------------------
+
+def per_device_bytes(n: int, b: int, rho: float, p: int,
+                     replay_tuples: int = 0, dp: int = 1) -> dict:
+    """Paper §5.2 memory model, per device, on the (dp, sp=p) mesh:
+    sparse-COO adjacency 20·N²·ρ·B/(dp·sp) bytes, masks 4·N·B/(dp·sp)
+    each, replay 8·R·(N/sp + 1)/dp."""
+    return {
+        "adjacency": 20.0 * n * n * rho * b / (p * dp),
+        "solution": 4.0 * n * b / (p * dp),
+        "candidates": 4.0 * n * b / (p * dp),
+        "replay": 8.0 * replay_tuples * (n / p + 1) / dp,
+    }
+
+
+def sparse_per_device_bytes(n: int, max_deg: int, b: int, p: int,
+                            replay_tuples: int = 0, dp: int = 1) -> dict:
+    """Padded edge-list storage per device on the (dp, sp=p) mesh (this
+    repo's TPU adaptation of §5.2): 4-byte neighbor ids + 1-byte validity
+    per slot, masks as above."""
+    return {
+        "adjacency": 5.0 * n * max_deg * b / (p * dp),
+        "solution": 4.0 * n * b / (p * dp),
+        "candidates": 4.0 * n * b / (p * dp),
+        "replay": 8.0 * replay_tuples * (n / p + 1) / dp,
+    }

@@ -5,7 +5,7 @@ combined model" so both are trained jointly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -41,8 +41,11 @@ class PolicyConfig:
     graph_rep: str = "dense"     # GraphRep backend: "dense" | "sparse"
     # Training-engine selection (DESIGN.md §8), config-driven like graph_rep:
     engine: str = "device"       # "device" (fused jitted step) | "host"
-    spatial: int = 0             # P-way node sharding of GD loss/grad
-                                 # (paper Alg. 5); 0 → single device
+    # 2-D (data, graph) device-mesh spec (DESIGN.md §10): a (dp, sp) tuple
+    # shards batches dp ways over `data` and node rows sp ways over
+    # `graph`.  Back-compat: an int P means the legacy 1-D node sharding
+    # (1, P); 0 → single device, no mesh.
+    spatial: Union[int, Tuple[int, int]] = 0
 
 
 def init_policy(key: jax.Array, cfg: PolicyConfig) -> PolicyParams:

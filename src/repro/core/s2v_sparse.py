@@ -36,7 +36,32 @@ from .policy import PolicyParams
 from .qmodel import scores_local, NEG_INF
 
 __all__ = ["SparseGraphBatch", "sparse_batch_from_dense", "embed_sparse",
-           "embed_sparse_local", "sparse_policy_scores", "sparse_state_bytes"]
+           "embed_sparse_local", "residual_edge_factors",
+           "sparse_policy_scores", "sparse_state_bytes"]
+
+
+def residual_edge_factors(nbr_local: jax.Array, valid_local: jax.Array,
+                          sol_local: jax.Array, *,
+                          axis: Optional[str] = None) -> jax.Array:
+    """(B, Nl, D) residual-edge factors: ``valid ∧ keep[u] ∧ keep[v]`` on
+    DISTRIBUTED sparse storage — the one shared construction behind the
+    spatial scores, spatial train-grad, and fused-solve paths.
+
+    With ``axis`` naming the node-sharding mesh axis, the (B, Nl) local
+    solution slice is all-gathered first (4·N·B bytes — the paper §5.1
+    C/S broadcast) so the ``keep`` factors of REMOTE neighbor endpoints
+    are visible to the local gather; the gathered mask is padded with a
+    sentinel column for the padded neighbor slots.  ``axis=None`` is the
+    single-device case (Nl == N), delegating to
+    :func:`repro.core.graphs.residual_edge_mask`.
+    """
+    if axis is None:
+        return residual_edge_mask(nbr_local, valid_local, sol_local)
+    keep_local = 1.0 - sol_local
+    keep_full = lax.all_gather(keep_local, axis, axis=1, tiled=True)
+    keep_pad = jnp.pad(keep_full, ((0, 0), (0, 1)))          # sentinel slot
+    keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_pad, nbr_local)
+    return valid_local.astype(jnp.float32) * keep_nbr * keep_local[:, :, None]
 
 
 def _gather_neighbors(x: jax.Array, nbrs: jax.Array) -> jax.Array:
@@ -110,7 +135,7 @@ def embed_sparse(params, g, sol: jax.Array, *, num_layers: int,
     ``residual=False`` embeds the original topology instead (MaxCut
     semantics — selecting a node does not delete edges)."""
     if residual:
-        edge = residual_edge_mask(g.neighbors, g.valid, sol)
+        edge = residual_edge_factors(g.neighbors, g.valid, sol, axis=None)
     else:
         edge = g.valid.astype(jnp.float32)
     return embed_sparse_local(params, g.neighbors, edge, sol,

@@ -1,18 +1,32 @@
-"""Spatial parallelism (paper §4.1): shard one graph's state row-wise across
-P devices and evaluate the policy with per-layer collectives.
+"""Spatially-partitioned policy evaluation and GD on the 2-D ``(data,
+graph)`` mesh (paper §4.1 generalized; DESIGN.md §3/§10).
+
+The mesh/partitioning layer itself lives in :mod:`repro.core.mesh` — this
+module holds the shard_map computations that run on it:
 
 ``spatial_scores_fn`` is the paper's Alg. 2 + Alg. 3 + Alg. 4 lines 4-6
-wrapped in ``jax.shard_map`` over a 1-D ``graph`` mesh axis: each device
-holds (B, N/P, N) adjacency rows and (B, N/P) mask slices, computes local
-scores, and the all-gather returns the full (B, N) score vector on every
-device.
+under ``jax.shard_map``: each device holds a (B/dp, N/sp, N) tile of
+adjacency rows and (B/dp, N/sp) mask slices, computes local scores with
+per-layer collectives over the ``graph`` axis only (each data slice is an
+independent graph batch), and the all-gather returns the full (B/dp, N)
+score block replicated over ``graph``.
 
 ``sparse_spatial_scores_fn`` is the same algorithm on the paper's
 DISTRIBUTED SPARSE GRAPH STORAGE (§4.1, §5.2): each device holds the
-(B, N/P, D) padded neighbor-list rows of its resident nodes — O(N·maxdeg/P)
-per device instead of O(N²/P) — plus local C/S mask slices.  Per embedding
-layer the (B, K, N) embedding buffer is all-gathered so local gathers can
-reach remote-resident neighbors (DESIGN.md §3).
+(B/dp, N/sp, D) padded neighbor-list rows of its resident nodes —
+O(N·maxdeg/sp) per device instead of O(N²/sp) — plus local C/S mask
+slices.  Per embedding layer the (B/dp, K, N) embedding buffer is
+all-gathered over ``graph`` so local gathers can reach remote-resident
+neighbors (DESIGN.md §3).
+
+``spatial_train_minibatch_fn`` is Alg. 5's per-GPU gradient descent with
+the MPI_All_reduce generalized to the 2-D mesh: every (data, graph) tile
+owns the TD-error terms of its local batch rows whose action node resides
+in its row block, and gradients are ``lax.psum``-ed over BOTH axes.
+
+Legacy entry point: ``make_graph_mesh(P)`` returns the ``(1, P)`` mesh —
+the paper's original 1-D node sharding is the dp=1 column of the 2-D
+layout, so every pre-mesh caller keeps working unchanged.
 """
 from __future__ import annotations
 
@@ -24,57 +38,75 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from .mesh import (DATA, GRAPH, DENSE_STATE_SPECS, SPARSE_STATE_SPECS,
+                   SCORES_SPEC, TUPLE_SPEC, make_mesh, mesh_shape,
+                   per_device_bytes, sparse_per_device_bytes)   # noqa: F401
 from .policy import PolicyParams, policy_scores
 from .qmodel import scores_local
-from .s2v_sparse import embed_sparse_local
+from .s2v_sparse import embed_sparse_local, residual_edge_factors
 
-AXIS = "graph"
+AXIS = GRAPH     # node-sharding axis name used by the per-layer collectives
 
 
 def make_graph_mesh(p: Optional[int] = None) -> jax.sharding.Mesh:
-    """1-D mesh over the paper's P GPUs (here: P host devices)."""
-    from ..sharding.compat import auto_axis_types_kw
-    devs = jax.devices()
-    p = len(devs) if p is None else p
-    return jax.make_mesh((p,), (AXIS,), **auto_axis_types_kw(1))
+    """Legacy 1-D entry point: P-way node sharding == the (1, P) mesh."""
+    return make_mesh(1, p)
+
+
+def _check_divisible(mesh, b: int, n: int, what: str) -> None:
+    dp, sp = mesh_shape(mesh)
+    if b % dp:
+        raise ValueError(f"{what}: batch {b} not divisible by data-axis "
+                         f"size {dp} of mesh {mesh_shape(mesh)}")
+    if n % sp:
+        raise ValueError(f"{what}: {n} node rows not divisible by "
+                         f"graph-axis size {sp} of mesh {mesh_shape(mesh)}")
 
 
 def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
                       mp_impl=None):
-    """Build the P-way partitioned scorer (dense representation).
+    """Build the mesh-partitioned scorer (dense representation).
 
-    in:  adj (B, N, N), sol (B, N), cand (B, N)   [sharded on node rows]
-    out: scores (B, N) replicated (post all-gather, Alg. 4 line 6).
+    in:  adj (B, N, N), sol (B, N), cand (B, N)   [batch sharded over
+         ``data``, node rows over ``graph``]
+    out: scores (B, N), replicated over ``graph`` (post all-gather,
+         Alg. 4 line 6), batch still sharded over ``data``.
     """
 
     from ..sharding.compat import shard_map_nocheck
 
     @functools.partial(
         shard_map_nocheck, mesh=mesh,
-        in_specs=(P(), P(None, AXIS, None), P(None, AXIS), P(None, AXIS)),
-        out_specs=P(),
-        # all_gather output is value-identical on every device (Alg. 4 line
-        # 6); VMA/rep inference can't prove that statically → disable check.
+        in_specs=(P(),) + DENSE_STATE_SPECS,
+        out_specs=SCORES_SPEC,
+        # all_gather output is value-identical on every device of a graph
+        # group (Alg. 4 line 6); VMA/rep inference can't prove that
+        # statically → disable check.
     )
     def scorer(params: PolicyParams, adj_l, sol_l, cand_l):
         local = policy_scores(params, adj_l, sol_l, cand_l,
                               num_layers=num_layers, axis=AXIS,
                               mp_impl=mp_impl)
-        # Alg. 4 line 6: MPI_All_gather of the (B, N/P) local scores.
+        # Alg. 4 line 6: MPI_All_gather of the (B/dp, N/sp) local scores.
         gathered = lax.all_gather(local, AXIS, axis=1, tiled=True)
         return gathered
 
-    return scorer
+    def fn(params, adj, sol, cand):
+        _check_divisible(mesh, adj.shape[0], adj.shape[1], "dense scores")
+        return scorer(params, adj, sol, cand)
+
+    return fn
 
 
 def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
                              gather_impl=None, *, residual: bool = True):
-    """Build the P-way partitioned scorer on distributed sparse storage.
+    """Build the mesh-partitioned scorer on distributed sparse storage.
 
     in:  neighbors (B, N, D) int32, valid (B, N, D) bool, sol (B, N),
-         cand (B, N)   [all sharded on the node axis: each device holds the
-         (B, N/P, D) neighbor-list rows of its resident nodes]
-    out: scores (B, N) replicated.
+         cand (B, N)   [batch sharded over ``data``; the node axis over
+         ``graph``: each device holds the (B/dp, N/sp, D) neighbor-list
+         rows of its resident nodes]
+    out: scores (B, N), replicated over ``graph``, batch over ``data``.
 
     ``residual=False`` scores the ORIGINAL topology (MaxCut semantics —
     committing a node deletes no edges), skipping the solution-mask
@@ -85,21 +117,15 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
 
     @functools.partial(
         shard_map_nocheck, mesh=mesh,
-        in_specs=(P(), P(None, AXIS, None), P(None, AXIS, None),
-                  P(None, AXIS), P(None, AXIS)),
-        out_specs=P(),
+        in_specs=(P(),) + SPARSE_STATE_SPECS,
+        out_specs=SCORES_SPEC,
     )
     def scorer(params: PolicyParams, nbr_l, valid_l, sol_l, cand_l):
         if residual:
             # Residual-edge factors need keep[] of REMOTE neighbor
-            # endpoints: one all-gather of the (B, N) solution mask
-            # (4·N·B bytes — paper §5.1's C/S broadcast).
-            sol_full = lax.all_gather(sol_l, AXIS, axis=1, tiled=True)
-            keep_full = jnp.pad(1.0 - sol_full, ((0, 0), (0, 1)))  # sentinel
-            keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_full, nbr_l)
-            keep_l = 1.0 - sol_l
-            edge_l = (valid_l.astype(jnp.float32) * keep_nbr
-                      * keep_l[:, :, None])
+            # endpoints (paper §5.1's C/S broadcast) — the shared helper
+            # all-gathers the local S slice over the graph axis.
+            edge_l = residual_edge_factors(nbr_l, valid_l, sol_l, axis=AXIS)
         else:
             edge_l = valid_l.astype(jnp.float32)
         emb_l = embed_sparse_local(params.em, nbr_l, edge_l, sol_l,
@@ -108,18 +134,23 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
         local = scores_local(params.q, emb_l, cand_l, axis=AXIS, masked=True)
         return lax.all_gather(local, AXIS, axis=1, tiled=True)
 
-    return scorer
+    def fn(params, nbr, valid, sol, cand):
+        _check_divisible(mesh, nbr.shape[0], nbr.shape[1], "sparse scores")
+        return scorer(params, nbr, valid, sol, cand)
+
+    return fn
 
 
 def spatial_solve_scores_fn(mesh: jax.sharding.Mesh, *, num_layers: int,
                             rep, residual: bool = True):
-    """State-in, scores-out wrapper around the P-way partitioned scorers for
-    the FUSED solve loop (DESIGN.md §9): takes the replicated solve state,
-    reshards its arrays onto the mesh's node-row partitioning inside jit,
-    runs one spatially-partitioned policy evaluation (per-eval collectives
-    unchanged from the host spatial path), and returns the all-gathered
-    (B, N) scores on every device so the top-d commit runs replicated —
-    the paper's Fig. 4 lockstep selection.
+    """State-in, scores-out wrapper around the mesh-partitioned scorers for
+    the FUSED solve loop (DESIGN.md §9): takes the solve state (batch
+    sharded over ``data`` by the engine), reshards its arrays onto the
+    mesh's (data, graph) tiling inside jit, runs one spatially-partitioned
+    policy evaluation (per-eval collectives over ``graph`` unchanged from
+    the 1-D path), and returns the all-gathered (B, N) scores replicated
+    over ``graph`` so the top-d commit runs in the paper's Fig. 4 lockstep
+    — data-parallel over the batch, replicated over node shards.
     """
     if rep.name == "sparse":
         scorer = sparse_spatial_scores_fn(mesh, num_layers,
@@ -134,38 +165,45 @@ def spatial_solve_scores_fn(mesh: jax.sharding.Mesh, *, num_layers: int,
 
 def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
                                num_layers: int, lr: float, jit: bool = True):
-    """Build the P-way spatial GD step (paper Alg. 5's per-GPU gradient
-    descent + MPI_All_reduce of gradients, collapsed to SPMD; DESIGN.md §8).
+    """Build the mesh-parallel GD step (paper Alg. 5's per-GPU gradient
+    descent + MPI_All_reduce, generalized to the 2-D mesh; DESIGN.md
+    §8/§10).
 
     Returns ``fn(params, opt, state, action, target) -> (params, opt,
     loss)`` — a drop-in for the single-device ``_train_minibatch``: the TD
-    loss/grad of the minibatch runs under ``shard_map`` on the (B, N/P, ·)
-    node-sharded layout.  Each device owns the squared-error terms of the
-    tuples whose action node resides in its row block, evaluates them from
-    spatially-partitioned policy scores (per-layer collectives as in the
-    inference path), and the gradients are ``lax.psum``-ed over the
-    ``graph`` axis before one replicated Adam update.  Dispatches on the
-    state's representation (dense ``GraphState`` / ``SparseGraphState``)
-    and its ``residual`` semantics.  N must be divisible by P.
+    loss/grad of the minibatch runs under ``shard_map`` on the
+    (B/dp, N/sp, ·) tiled layout.  Each (data, graph) mesh tile owns the
+    squared-error terms of its LOCAL batch rows whose action node resides
+    in its node-row block, evaluates them from spatially-partitioned
+    policy scores (per-layer collectives over ``graph``, as in the
+    inference path), and loss and gradients are ``lax.psum``-ed over BOTH
+    axes before one replicated Adam update.  Dispatches on the state's
+    representation (dense ``GraphState`` / ``SparseGraphState``) and its
+    ``residual`` semantics.  B must divide by dp and N by sp.
     """
     from functools import partial
     from ..optim import adam_update
     from ..sharding.compat import shard_map_nocheck
     from .graphs import SparseGraphState
 
+    BOTH = (DATA, GRAPH)
+    dp, _sp = mesh_shape(mesh)
+
     def _ownership_loss(s_l, action, target, my, nl):
-        """Mean squared TD error restricted to locally-owned actions."""
+        """Squared TD error of the locally-owned (batch row, action node)
+        terms, normalized by the GLOBAL minibatch size so the psum over
+        both mesh axes reproduces the single-device mean."""
         loc = action - my * nl
         owned = (loc >= 0) & (loc < nl)
         qsa = jnp.take_along_axis(
             s_l, jnp.clip(loc, 0, nl - 1)[:, None], axis=-1)[:, 0]
         sq = jnp.where(owned, jnp.square(qsa - target), 0.0)
-        return sq.sum() / action.shape[0]
+        return sq.sum() / (action.shape[0] * dp)
 
     def _build_dense():
         @partial(shard_map_nocheck, mesh=mesh,
-                 in_specs=(P(), P(None, AXIS, None), P(None, AXIS),
-                           P(None, AXIS), P(), P()),
+                 in_specs=(P(),) + DENSE_STATE_SPECS
+                 + (TUPLE_SPEC, TUPLE_SPEC),
                  out_specs=(P(), P()))
         def grad_fn(params, adj_l, sol_l, cand_l, action, target):
             nl = adj_l.shape[1]
@@ -178,16 +216,17 @@ def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
                 return _ownership_loss(s_l, action, target, my, nl)
 
             loss_l, grads_l = jax.value_and_grad(loss_fn)(params)
-            # Alg. 5: MPI_All_reduce of the (4K²+4K)-parameter gradient.
-            grads = jax.tree.map(lambda g: lax.psum(g, AXIS), grads_l)
-            return lax.psum(loss_l, AXIS), grads
+            # Alg. 5: MPI_All_reduce of the (4K²+4K)-parameter gradient —
+            # over the node shards AND the batch shards.
+            grads = jax.tree.map(lambda g: lax.psum(g, BOTH), grads_l)
+            return lax.psum(loss_l, BOTH), grads
 
         return grad_fn
 
     def _build_sparse(residual: bool):
         @partial(shard_map_nocheck, mesh=mesh,
-                 in_specs=(P(), P(None, AXIS, None), P(None, AXIS, None),
-                           P(None, AXIS), P(None, AXIS), P(), P()),
+                 in_specs=(P(),) + SPARSE_STATE_SPECS
+                 + (TUPLE_SPEC, TUPLE_SPEC),
                  out_specs=(P(), P()))
         def grad_fn(params, nbr_l, val_l, sol_l, cand_l, action, target):
             nl = nbr_l.shape[1]
@@ -195,12 +234,8 @@ def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
 
             def loss_fn(p):
                 if residual:
-                    sol_full = lax.all_gather(sol_l, AXIS, axis=1, tiled=True)
-                    keep_full = jnp.pad(1.0 - sol_full, ((0, 0), (0, 1)))
-                    keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_full,
-                                                               nbr_l)
-                    edge_l = (val_l.astype(jnp.float32) * keep_nbr *
-                              (1.0 - sol_l)[:, :, None])
+                    edge_l = residual_edge_factors(nbr_l, val_l, sol_l,
+                                                   axis=AXIS)
                 else:
                     edge_l = val_l.astype(jnp.float32)
                 emb_l = embed_sparse_local(p.em, nbr_l, edge_l, sol_l,
@@ -210,14 +245,36 @@ def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
                 return _ownership_loss(s_l, action, target, my, nl)
 
             loss_l, grads_l = jax.value_and_grad(loss_fn)(params)
-            grads = jax.tree.map(lambda g: lax.psum(g, AXIS), grads_l)
-            return lax.psum(loss_l, AXIS), grads
+            grads = jax.tree.map(lambda g: lax.psum(g, BOTH), grads_l)
+            return lax.psum(loss_l, BOTH), grads
 
         return grad_fn
 
     built = {}
 
+    # Boundary staging: on the full 2-D mesh (dp>1 ∧ sp>1 ONLY), minibatch
+    # operands produced by in-jit gathers (replay sample → Tuples2Graphs)
+    # and fed straight into shard_map get mispartitioned by GSPMD on the
+    # JAX versions this repo supports (observed on 0.4.x CPU: wrong
+    # operand slices, order-1e-4 loss errors — see tests/test_mesh.py).
+    # Staging the (small) minibatch replicated at the shard_map boundary
+    # restores exactness; the in_specs still tile all GD compute per
+    # device.  1-D meshes are unaffected and keep the partitioned operand
+    # layout (per-device minibatch memory stays O(1/P), §5.2).
+    if dp > 1 and mesh.shape[GRAPH] > 1:
+        _stage_sharding = jax.sharding.NamedSharding(mesh, P())
+
+        def _stage(x):
+            return jax.lax.with_sharding_constraint(x, _stage_sharding)
+    else:
+        def _stage(x):
+            return x
+
     def fn(params, opt, state, action, target):
+        _check_divisible(mesh, state.candidate.shape[0],
+                         state.candidate.shape[1], "spatial GD")
+        state = jax.tree.map(_stage, state)
+        action, target = _stage(action), _stage(target)
         if isinstance(state, SparseGraphState):
             key = ("sparse", state.residual)
             if key not in built:
@@ -238,44 +295,24 @@ def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
 
 
 def shard_graph_arrays(mesh, adj, sol, cand):
-    """Place (B,N,N)/(B,N)/(B,N) arrays with the paper's row partitioning."""
+    """Place (B,N,N)/(B,N)/(B,N) arrays with the mesh partitioning: batch
+    over ``data``, node rows over ``graph`` (the paper's row layout)."""
     ns = jax.sharding.NamedSharding
-    adj = jax.device_put(adj, ns(mesh, P(None, AXIS, None)))
-    sol = jax.device_put(sol, ns(mesh, P(None, AXIS)))
-    cand = jax.device_put(cand, ns(mesh, P(None, AXIS)))
+    a_spec, s_spec, c_spec = DENSE_STATE_SPECS
+    adj = jax.device_put(adj, ns(mesh, a_spec))
+    sol = jax.device_put(sol, ns(mesh, s_spec))
+    cand = jax.device_put(cand, ns(mesh, c_spec))
     return adj, sol, cand
 
 
 def shard_sparse_arrays(mesh, neighbors, valid, sol, cand):
-    """Place the sparse state with the paper's row partitioning: each device
-    receives the (B, N/P, D) neighbor-list block of its resident nodes."""
+    """Place the sparse state with the mesh partitioning: each device
+    receives the (B/dp, N/sp, D) neighbor-list block of its resident
+    nodes."""
     ns = jax.sharding.NamedSharding
-    neighbors = jax.device_put(neighbors, ns(mesh, P(None, AXIS, None)))
-    valid = jax.device_put(valid, ns(mesh, P(None, AXIS, None)))
-    sol = jax.device_put(sol, ns(mesh, P(None, AXIS)))
-    cand = jax.device_put(cand, ns(mesh, P(None, AXIS)))
+    n_spec, v_spec, s_spec, c_spec = SPARSE_STATE_SPECS
+    neighbors = jax.device_put(neighbors, ns(mesh, n_spec))
+    valid = jax.device_put(valid, ns(mesh, v_spec))
+    sol = jax.device_put(sol, ns(mesh, s_spec))
+    cand = jax.device_put(cand, ns(mesh, c_spec))
     return neighbors, valid, sol, cand
-
-
-def per_device_bytes(n: int, b: int, rho: float, p: int,
-                     replay_tuples: int = 0) -> dict:
-    """Paper §5.2 memory model, per device: sparse-COO adjacency
-    20·N²·ρ·B/P bytes, masks 4·N·B/P each, replay 8·R·(N/P + 1)."""
-    return {
-        "adjacency": 20.0 * n * n * rho * b / p,
-        "solution": 4.0 * n * b / p,
-        "candidates": 4.0 * n * b / p,
-        "replay": 8.0 * replay_tuples * (n / p + 1),
-    }
-
-
-def sparse_per_device_bytes(n: int, max_deg: int, b: int, p: int,
-                            replay_tuples: int = 0) -> dict:
-    """Padded edge-list storage per device (this repo's TPU adaptation of
-    §5.2): 4-byte neighbor ids + 1-byte validity per slot, masks as above."""
-    return {
-        "adjacency": 5.0 * n * max_deg * b / p,
-        "solution": 4.0 * n * b / p,
-        "candidates": 4.0 * n * b / p,
-        "replay": 8.0 * replay_tuples * (n / p + 1),
-    }

@@ -96,10 +96,12 @@ def train_agent(
 
     if engine == "device":
         from .engine import engine_init, get_train_step, sync_to_agent
+        from .mesh import mesh_from_spec
         fused = get_train_step(agent.cfg, rep=rep, problem=problem, tau=tau,
                                target_mode=agent.target_mode)
         es = engine_init(agent.cfg, agent.params, agent.opt, n, seed=seed,
-                         step_count=agent.step_count)
+                         step_count=agent.step_count,
+                         mesh=mesh_from_spec(agent.cfg.spatial))
 
     for _ep in range(episodes):
         # Alg. 5 line 4: random training graph(s), same across all devices.

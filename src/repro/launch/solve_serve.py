@@ -25,20 +25,26 @@ def main():
     ap.add_argument("--kind", choices=["er", "ba", "social"], default="er")
     ap.add_argument("--problem", choices=["mvc", "maxcut"], default="mvc")
     ap.add_argument("--rep", choices=["dense", "sparse"], default="dense")
-    ap.add_argument("--spatial", type=int, default=0,
-                    help="P-way spatial partitioning of every policy eval")
+    ap.add_argument("--spatial", default="0",
+                    help="2-D (data, graph) mesh spec: 'dp,sp' shards each "
+                         "bucket dispatch dp ways over the batch (data "
+                         "axis; --max-batch becomes per-device) and every "
+                         "policy eval sp ways over node rows; a bare int P "
+                         "means the legacy node sharding (1, P); 0 → "
+                         "single device")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--embed-dim", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
-    from ..core import PolicyConfig, init_policy
+    from ..core import PolicyConfig, init_policy, parse_spatial
     from ..core.graphs import erdos_renyi, barabasi_albert, social_like
     from ..serving import GraphSolverService
 
     cfg = PolicyConfig(embed_dim=args.embed_dim, num_layers=2,
-                       graph_rep=args.rep, spatial=args.spatial)
+                       graph_rep=args.rep,
+                       spatial=parse_spatial(args.spatial))
     if args.ckpt_dir:
         svc = GraphSolverService.from_checkpoint(
             args.ckpt_dir, cfg, max_batch=args.max_batch)

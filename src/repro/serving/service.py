@@ -24,6 +24,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from ..core.graphrep import GraphRep, get_rep
+from ..core.mesh import normalize_spatial
 from ..core.policy import PolicyConfig, PolicyParams
 from .bucketing import MIN_BUCKET, BatchPlan, plan_batches, unpad_solution
 
@@ -68,10 +69,15 @@ class GraphSolverService:
     cfg : PolicyConfig — supplies num_layers and the rep/spatial selection
         (the same config-driven switches as training; the service always
         dispatches to the fused device engine — use ``repro.core.solve``
-        directly for the host-loop reference).
+        directly for the host-loop reference).  ``cfg.spatial`` selects
+        the 2-D ``(data, graph)`` mesh (DESIGN.md §10): each bucket
+        dispatch spreads its rows across the ``data`` axis, so
+        ``max_batch`` is the PER-DEVICE row count and one dispatch serves
+        ``max_batch × dp`` requests.
     multi_node : adaptive top-d commit schedule (§4.5.1) per evaluation.
-    max_batch : rows per dispatch; every batch is padded to exactly this
-        many rows so each (bucket, problem) pair compiles ONCE.
+    max_batch : rows per data-axis device per dispatch; every batch is
+        padded to exactly ``max_batch × dp`` rows so each
+        (bucket, problem, mesh) triple compiles ONCE.
     sparse_max_degree : sparse backend only — neighbor-list width per
         bucket.  The default pins it to the bucket's node count (the only
         traffic-independent safe bound), keeping shapes fully static; pass
@@ -90,6 +96,10 @@ class GraphSolverService:
         self.rep = get_rep(rep if rep is not None else cfg.graph_rep)
         self.multi_node = multi_node
         self.max_batch = max_batch
+        self.mesh_shape = normalize_spatial(cfg.spatial)   # (dp, sp)
+        # bucket dispatch spreads rows over the data axis: max_batch rows
+        # per device, max_batch·dp per compiled batch
+        self.rows_per_dispatch = max_batch * self.mesh_shape[0]
         self.min_bucket = min_bucket
         self.sparse_max_degree = sparse_max_degree
         self.stats = ServiceStats()
@@ -147,14 +157,14 @@ class GraphSolverService:
         sparse backend, by the pinned neighbor-list width), so a hit never
         retraces."""
         key = (nb, problem, self.rep.name, self.multi_node,
-               self.cfg.num_layers, self.cfg.spatial)
+               self.cfg.num_layers, self.mesh_shape)
         fn = self._compiled.get(key)
         if fn is None:
             self.stats.compiles += 1
             fn = self._get_solve_step(
                 rep=self._bucket_rep(nb), problem=problem,
                 num_layers=self.cfg.num_layers,
-                use_adaptive=self.multi_node, spatial=self.cfg.spatial)
+                use_adaptive=self.multi_node, spatial=self.mesh_shape)
             self._compiled[key] = fn
         else:
             self.stats.cache_hits += 1
@@ -174,7 +184,8 @@ class GraphSolverService:
                jnp.asarray(plan.nb + MAX_D, jnp.int32)))
         self.stats.solve_seconds += time.perf_counter() - t0
         self.stats.batches += 1
-        self.stats.padded_rows += self.max_batch - len(plan.request_ids)
+        self.stats.padded_rows += (self.rows_per_dispatch
+                                   - len(plan.request_ids))
         out = []
         for row, (rid, n) in enumerate(zip(plan.request_ids, plan.sizes)):
             mask = unpad_solution(sol[row], n)
@@ -196,7 +207,7 @@ class GraphSolverService:
         self._queue.clear()
         pending = {r.id: r for r in requests}
         try:
-            for plan in plan_batches(requests, self.max_batch,
+            for plan in plan_batches(requests, self.rows_per_dispatch,
                                      self.min_bucket):
                 for resp in self._dispatch(plan):
                     self._results[resp.id] = resp
