@@ -1,0 +1,116 @@
+"""Problem-suite quality benchmark: every registered environment solved by
+one (briefly trained) policy, scored against its matching classical greedy
+baseline (DESIGN.md §11), plus steady-state per-eval wall time through the
+fused engine.
+
+Quality per env:
+
+- mvc / mds (sense "min"): ratio = |RL| / |greedy|  (≤ 1 is better)
+- mis       (sense "max"): ratio = |RL| / |greedy|  (≥ 1 is better)
+- maxcut    (sense "max"): ratio = best cut along the RL commit trajectory
+  / greedy cut (the env assigns every node eventually, so the final
+  assignment's cut is trivially 0 — quality lives in the trajectory).
+
+The harness is the claim under test (a tiny CPU-trained policy won't beat
+greedy): every solution must pass its env's feasibility checker, and the
+ratios/timings land in experiments/bench/problem_suite.json so regressions
+in any env's solve path show up in bench-smoke CI.
+
+  PYTHONPATH=src python -m benchmarks.problem_suite [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import save
+
+
+def _measure_env(problem: str, params, cfg, adj, repeats: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import env as env_lib, solve
+    from repro.core.env import cut_value
+    from repro.core.inference import best_trajectory_cut
+    from repro.core.solvers import heuristic_batch
+
+    kw = dict(num_layers=cfg.num_layers, multi_node=True, problem=problem,
+              engine="device")
+    res = solve(params, adj, **kw)          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = solve(params, adj, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+
+    feasible = np.asarray(env_lib.checker(problem)(
+        jnp.asarray(adj), jnp.asarray(res.solution)))
+    greedy = heuristic_batch(problem, adj)
+    if problem == "maxcut":
+        rl_val = best_trajectory_cut(params, adj,
+                                     num_layers=cfg.num_layers)
+        base_val = np.asarray(cut_value(jnp.asarray(adj), jnp.asarray(
+            greedy, jnp.float32)))
+    else:
+        rl_val = res.sizes.astype(np.float64)
+        base_val = greedy.sum(-1).astype(np.float64)
+    ratio = float(np.mean(rl_val / np.maximum(base_val, 1.0)))
+    return {
+        "sense": env_lib.sense(problem),
+        "feasible": bool(feasible.all()),
+        "quality_ratio_vs_greedy": ratio,
+        "rl_mean": float(rl_val.mean()),
+        "greedy_mean": float(base_val.mean()),
+        "policy_evals": int(res.policy_evals),
+        "s_per_solve": dt,
+        "us_per_eval": dt / max(res.policy_evals, 1) * 1e6,
+    }
+
+
+def run(quick: bool = False):
+    import jax
+    from repro.core import env as env_lib
+    from repro.core import PolicyConfig, init_policy
+    from repro.core.graphs import random_graph_batch
+    from .common import trained_agent
+
+    n, batch = (16, 4) if quick else (32, 8)
+    repeats = 3 if quick else 5
+    adj = random_graph_batch("er", n, batch, seed=7, rho=0.2)
+    if quick:
+        cfg = PolicyConfig(embed_dim=16, num_layers=2)
+        params = init_policy(jax.random.key(0), cfg)
+    else:
+        agent = trained_agent(n=n, steps=150)
+        params, cfg = agent.params, agent.cfg
+
+    results = {"config": {"n": n, "batch": batch, "repeats": repeats,
+                          "quick": quick, "trained_steps": 0 if quick
+                          else 150, "envs": env_lib.names()}}
+    rows = []
+    for problem in env_lib.names():
+        r = _measure_env(problem, params, cfg, adj, repeats)
+        results[problem] = r
+        if not r["feasible"]:
+            raise RuntimeError(f"{problem}: infeasible solution from the "
+                               f"fused solve — checker rejected it")
+        rows.append((
+            f"problem_suite_{problem}", r["us_per_eval"],
+            f"{r['sense']} ratio {r['quality_ratio_vs_greedy']:.3f} "
+            f"(RL {r['rl_mean']:.1f} vs greedy {r['greedy_mean']:.1f}) "
+            f"{r['policy_evals']} evals"))
+    save("problem_suite", results)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick):
+        print(f'{name},{us:.1f},"{derived}"')
+
+
+if __name__ == "__main__":
+    main()

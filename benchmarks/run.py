@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
   §5.2   sparse_vs_dense (GraphRep backend memory/latency)
   §8/§9  train_step_scaling / inference_step_scaling (fused engines)
   §10    mesh_scaling (2-D (data, graph) mesh: time + per-device bytes)
+  §11    problem_suite (per-env quality vs greedy + per-eval time)
 """
 from __future__ import annotations
 
@@ -27,7 +28,7 @@ def main() -> None:
     from . import (learning_speed, multinode_selection, gd_iterations,
                    scaling, efficiency_model, kernel_bench,
                    roofline_summary, sparse_vs_dense, train_step_scaling,
-                   inference_step_scaling, mesh_scaling)
+                   inference_step_scaling, mesh_scaling, problem_suite)
     modules = {
         "learning_speed": learning_speed,
         "multinode_selection": multinode_selection,
@@ -40,6 +41,7 @@ def main() -> None:
         "train_step_scaling": train_step_scaling,
         "inference_step_scaling": inference_step_scaling,
         "mesh_scaling": mesh_scaling,
+        "problem_suite": problem_suite,
     }
     if args.only:
         keep = set(args.only.split(","))

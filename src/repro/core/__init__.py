@@ -9,14 +9,15 @@ adjacency or distributed sparse (B, N, D) padded neighbor lists.
 """
 from .graphs import (GraphState, SparseGraphState, SparseGraphBatch,
                      init_state, sparse_init_state, residual_adjacency,
-                     residual_edge_mask, sparse_batch_from_dense,
+                     residual_edge_mask, closed_neighborhood_keep,
+                     sparse_batch_from_dense,
                      erdos_renyi, barabasi_albert, social_like,
                      random_graph_batch)
 from .graphrep import (GraphRep, DenseRep, SparseRep, DENSE, SPARSE,
                        get_rep, rep_names, rep_for_state)
 from .policy import PolicyConfig, PolicyParams, init_policy, policy_scores
 from .s2v import S2VParams, init_s2v, embed_local, embed_full
-from .s2v_sparse import (embed_sparse, embed_sparse_local,
+from .s2v_sparse import (embed_sparse, embed_sparse_local, edge_factors,
                          sparse_policy_scores, sparse_state_bytes)
 from .qmodel import QParams, init_q, scores_local
 from .agent import Agent, candidate_mask

@@ -176,14 +176,15 @@ class Agent:
 
     # -- training -----------------------------------------------------------
     def train(self, source, tau: Optional[int] = None,
-              residual: bool = True) -> float:
+              residual=True, candidate_fn=None) -> float:
         """τ gradient-descent iterations on sampled minibatches (§4.5.2).
 
         ``source`` is the training-graph dataset in either representation:
         a (G, N, N) dense adjacency stack, or a ``SparseGraphBatch`` of
         (G, N, D) neighbor lists (from ``SparseRep.prepare_dataset``).
-        ``residual`` carries the env's semantics (see ``env.register``) so
-        replay states are re-materialized on the graph the policy acts on.
+        ``residual`` carries the env's topology mode and ``candidate_fn``
+        its candidate derivation (see ``env.register``) so replay states
+        are re-materialized on the graph the policy acts on.
         """
         rep = SPARSE if isinstance(source, SparseGraphBatch) else DENSE
         tau = self.cfg.grad_iters if tau is None else tau
@@ -195,11 +196,13 @@ class Agent:
                 self.cfg.minibatch, self._rng)
             if self.target_mode == "fresh":
                 st2 = rep.state_from_tuples(source, gi, sol2,
-                                            residual=residual)
+                                            residual=residual,
+                                            candidate_fn=candidate_fn)
                 nxt = max_q_state(self.params, st2, rep=rep,
                                   num_layers=self.cfg.num_layers)
                 tgt = rew + self.cfg.gamma * np.asarray(nxt) * (1.0 - done)
-            st = rep.state_from_tuples(source, gi, sol, residual=residual)
+            st = rep.state_from_tuples(source, gi, sol, residual=residual,
+                                       candidate_fn=candidate_fn)
             if is_multi(self.cfg.spatial):
                 self.params, self.opt, l = self._spatial_minibatch()(
                     self.params, self.opt, st,

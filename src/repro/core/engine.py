@@ -51,7 +51,7 @@ from jax import lax
 from . import env as env_lib
 from .agent import max_q_raw, train_minibatch_raw
 from .graphrep import GraphRep, get_rep
-from .inference import select_top_d
+from .inference import apply_selection
 from .mesh import (MeshSpec, constrain_batch, constrain_replay, make_mesh,
                    normalize_spatial, shard_replay)
 from .policy import PolicyConfig, PolicyParams
@@ -132,7 +132,8 @@ def get_train_step(cfg: PolicyConfig, *,
 def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
                       tau: int, target_mode: str, explore: bool):
     step_fn = env_lib.make(problem)
-    residual = env_lib.residual_semantics(problem)
+    residual = env_lib.residual_mode(problem)
+    cand_fn = env_lib.candidate_rule(problem)
     num_layers, gamma = cfg.num_layers, cfg.gamma
     minibatch, lr = cfg.minibatch, cfg.learning_rate
     stored = target_mode == "stored"
@@ -201,12 +202,14 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
                     replay, key, minibatch)
                 if not stored:
                     st2 = rep.state_from_tuples(source, gi, sol2,
-                                                residual=residual)
+                                                residual=residual,
+                                                candidate_fn=cand_fn)
                     nxt = max_q_raw(params, st2, rep=rep,
                                     num_layers=num_layers)
                     tgt = rew + gamma * nxt * (1.0 - dn)
                 st = rep.state_from_tuples(source, gi, sol,
-                                           residual=residual)
+                                           residual=residual,
+                                           candidate_fn=cand_fn)
                 params, opt, loss = gd_step(params, opt, st, act, tgt)
                 return (params, opt), loss
 
@@ -264,14 +267,13 @@ def get_solve_step(*, rep: Union[str, GraphRep, None] = None,
 @functools.lru_cache(maxsize=64)
 def _build_solve_step(rep: GraphRep, problem: str, num_layers: int,
                       use_adaptive: bool, spatial: tuple):
-    commit_fn = env_lib.commit_rule(problem)
     dp, sp = spatial
     if (dp, sp) != (1, 1):
         from .spatial import spatial_solve_scores_fn
         mesh = make_mesh(dp, sp)
         score_fn = spatial_solve_scores_fn(
             mesh, num_layers=num_layers, rep=rep,
-            residual=env_lib.residual_semantics(problem))
+            residual=env_lib.sparse_residual_flag(problem))
     else:
         mesh = None
 
@@ -295,9 +297,10 @@ def _build_solve_step(rep: GraphRep, problem: str, num_layers: int,
         def body(carry):
             state, evals, committed, _done = carry
             scores = score_fn(params, state)
-            sel, ncommit = select_top_d(scores, state.candidate,
-                                        use_adaptive)
-            new_state, done = commit_fn(state, sel)
+            # env-polymorphic select → prune → commit, shared verbatim
+            # with the host-loop step (bit-identical engines)
+            new_state, done, ncommit = apply_selection(
+                state, scores, state.candidate, use_adaptive, problem)
             return (new_state, evals + 1, committed + ncommit, done)
 
         init = (state, jnp.int32(0), jnp.zeros((b,), jnp.int32),

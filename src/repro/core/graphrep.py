@@ -17,6 +17,7 @@ passed to ``jax.jit`` as static arguments.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Union
 
 import numpy as np
@@ -24,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from .graphs import (GraphState, SparseGraphBatch, SparseGraphState,
+                     closed_neighborhood_keep, closed_neighborhood_keep_dense,
                      init_state, residual_adjacency, residual_edge_mask,
                      sparse_batch_from_dense, sparse_init_state)
 from .policy import PolicyParams, policy_scores
@@ -47,11 +49,17 @@ class GraphRep:
         raise NotImplementedError
 
     def state_from_tuples(self, source, graph_idx, solutions,
-                          residual: bool = True):
+                          residual=True, candidate_fn=None):
         """Tuples2Graphs (paper Alg. 5 line 21): re-materialize per-tuple
         states from (dataset source, graph ids, partial-solution masks).
-        ``residual=False`` keeps the original topology visible to the
-        policy (MaxCut semantics, see env.register)."""
+
+        ``residual`` is the env's topology mode (``env.register``):
+        ``"solution"``/True removes S's rows and columns (MVC),
+        ``"none"``/False keeps the original topology (MaxCut, MDS), and
+        ``"closed"`` removes S and its neighbors (MIS).  ``candidate_fn``
+        overrides the default candidate derivation (positive residual
+        degree ∧ not in S) with the env's registered rule — it receives
+        the re-materialized state and returns the (B, N) mask."""
         raise NotImplementedError
 
     # -- policy evaluation --------------------------------------------------
@@ -63,7 +71,8 @@ class GraphRep:
     # -- state transition ---------------------------------------------------
     def commit(self, state, sel: jax.Array):
         """Commit a (B, N) selection mask to the partial solution (Alg. 4
-        lines 7-9).  Returns (new_state, done)."""
+        lines 7-9, covering semantics — env-specific commit rules live in
+        the env registry).  Returns (new_state, done)."""
         raise NotImplementedError
 
     # -- accounting ---------------------------------------------------------
@@ -89,13 +98,26 @@ class DenseRep(GraphRep):
         return jnp.asarray(adj_stack, jnp.float32)
 
     def state_from_tuples(self, source, graph_idx, solutions,
-                          residual: bool = True) -> GraphState:
+                          residual=True, candidate_fn=None) -> GraphState:
+        from .env import normalize_residual_mode
+        mode = normalize_residual_mode(residual)
         sol = jnp.asarray(solutions, jnp.float32)
         base = source[jnp.asarray(graph_idx)]
-        adj = residual_adjacency(base, sol) if residual else base
-        deg = adj.sum(-1)
-        cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
-        return GraphState(adj=adj, candidate=cand, solution=sol)
+        if mode == "solution":
+            adj = residual_adjacency(base, sol)
+            cand = ((adj.sum(-1) > 0) & (sol < 0.5)).astype(jnp.float32)
+        elif mode == "none":
+            adj = base
+            cand = ((adj.sum(-1) > 0) & (sol < 0.5)).astype(jnp.float32)
+        else:                                # closed: drop S and N(S)
+            keep = closed_neighborhood_keep_dense(base, sol)
+            adj = base * keep[:, :, None] * keep[:, None, :]
+            cand = ((base.sum(-1) > 0) & (keep > 0.5)).astype(jnp.float32)
+        state = GraphState(adj=adj, candidate=cand, solution=sol)
+        if candidate_fn is not None:
+            state = dataclasses.replace(state,
+                                        candidate=candidate_fn(state))
+        return state
 
     def scores(self, params, state: GraphState, *, num_layers,
                masked=True) -> jax.Array:
@@ -139,19 +161,32 @@ class SparseRep(GraphRep):
         return sparse_batch_from_dense(np.asarray(adj_stack), self.max_degree)
 
     def state_from_tuples(self, source: SparseGraphBatch, graph_idx,
-                          solutions, residual: bool = True
+                          solutions, residual=True, candidate_fn=None
                           ) -> SparseGraphState:
+        from .env import normalize_residual_mode
+        mode = normalize_residual_mode(residual)
         sol = jnp.asarray(solutions, jnp.float32)
         gi = jnp.asarray(graph_idx)
         nbrs, valid = source.neighbors[gi], source.valid[gi]
-        if residual:
+        if mode == "solution":
             deg = residual_edge_mask(nbrs, valid, sol).sum(-1)
-        else:
+            cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
+            flag = True
+        elif mode == "none":
             deg = valid.sum(-1)
-        cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
-        return SparseGraphState(neighbors=nbrs, valid=valid,
-                                candidate=cand, solution=sol,
-                                residual=residual)
+            cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
+            flag = False
+        else:                                # closed: drop S and N(S)
+            keep = closed_neighborhood_keep(nbrs, valid, sol)
+            cand = ((valid.sum(-1) > 0) & (keep > 0.5)).astype(jnp.float32)
+            flag = mode
+        state = SparseGraphState(neighbors=nbrs, valid=valid,
+                                 candidate=cand, solution=sol,
+                                 residual=flag)
+        if candidate_fn is not None:
+            state = dataclasses.replace(state,
+                                        candidate=candidate_fn(state))
+        return state
 
     def scores(self, params, state: SparseGraphState, *, num_layers,
                masked=True) -> jax.Array:

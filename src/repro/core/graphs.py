@@ -174,10 +174,13 @@ class SparseGraphState:
     endpoint is in the solution — derived on the fly, O(N·D) state instead
     of O(N²).
 
-    ``residual`` (static) records whether the policy should see the residual
-    subgraph (MVC semantics — the dense path's rewritten adjacency) or the
-    original topology (MaxCut: selecting a node does not delete edges, so
-    the dense env keeps ``adj`` intact and the sparse scorer must match).
+    ``residual`` (static) records the env's topology mode (``env.register``):
+    ``True``/"solution" — the policy sees the residual subgraph implied by
+    S (MVC semantics, the dense path's rewritten adjacency);
+    ``False``/"none" — the original topology (MaxCut/MDS: selecting a node
+    deletes no edges); ``"closed"`` — S and its neighbors removed (MIS).
+    The sparse scorer derives matching edge factors
+    (``s2v_sparse.edge_factors``).
     """
     neighbors: jax.Array
     valid: jax.Array
@@ -235,6 +238,28 @@ def residual_edge_mask(neighbors: jax.Array, valid: jax.Array,
     keep_pad = jnp.pad(keep, ((0, 0), (0, 1)))              # sentinel slot
     keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_pad, neighbors)
     return valid.astype(jnp.float32) * keep_nbr * keep[:, :, None]
+
+
+def closed_neighborhood_keep(neighbors: jax.Array, valid: jax.Array,
+                             solution: jax.Array) -> jax.Array:
+    """(B, N) keep factors for CLOSED-neighborhood removal: a node survives
+    iff it is neither in ``solution`` nor adjacent to it (MIS residual
+    semantics — committing a node removes it and its neighbors).  The
+    sparse analogue of zeroing the rows/columns of S ∪ N(S)."""
+    sol_pad = jnp.pad(solution, ((0, 0), (0, 1)))           # sentinel slot
+    s_nbr = jax.vmap(lambda sb, nb: sb[nb])(sol_pad, neighbors)
+    any_nbr = (valid.astype(jnp.float32) * s_nbr).max(-1)
+    return (1.0 - solution) * (1.0 - any_nbr)
+
+
+def closed_neighborhood_keep_dense(adj: jax.Array,
+                                   solution: jax.Array) -> jax.Array:
+    """Dense counterpart of :func:`closed_neighborhood_keep`: keep factors
+    over a (B, N, N) adjacency — works on the original topology (replay
+    re-materialization) and on a residual adjacency (incremental commits:
+    a neighbor already removed has no surviving edge to lose)."""
+    nbr_s = jnp.einsum("bnm,bm->bn", adj, solution)
+    return (1.0 - solution) * (1.0 - (nbr_s > 0).astype(jnp.float32))
 
 
 def sparse_batch_from_dense(adj: np.ndarray,

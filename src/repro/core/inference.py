@@ -4,8 +4,9 @@
 ``solve`` drives a batch of B graphs to complete solutions using the
 (pre)trained policy, on EITHER the dense (B, N, N) adjacency path or the
 sparse (B, N, D) padded neighbor-list path (``rep="dense"|"sparse"``, see
-DESIGN.md §1), for ANY registered environment (``problem="mvc"|"maxcut"``
-— the commit/termination rule comes from the env registry, DESIGN.md §9).
+DESIGN.md §1), for ANY registered environment (``problem="mvc"|"maxcut"|
+"mis"|"mds"`` — the selection/commit/termination rules come from the env
+registry, DESIGN.md §9/§11).
 Each iteration is one policy evaluation; with the adaptive schedule, up to
 d ∈ {8,4,2,1} top-scoring candidates are committed per evaluation, with d
 shrinking as the candidate set shrinks:
@@ -74,6 +75,22 @@ def select_top_d(scores: jax.Array, candidate: jax.Array,
     return sel, valid.sum(-1)
 
 
+def apply_selection(state, scores, candidate, use_adaptive: bool,
+                    problem: str):
+    """Alg. 4 lines 5-9, env-polymorphic: top-d selection, the env's
+    optional selection prune (MIS must thin adjacent picks out of a raw
+    top-d set), and the env's commit/termination rule.  Shared verbatim by
+    the host-loop step and the fused while_loop body so the two engines
+    stay bit-identical per problem."""
+    sel, ncommit = select_top_d(scores, candidate, use_adaptive)
+    prune = env_lib.prune_rule(problem)
+    if prune is not None:
+        sel = prune(state, sel, scores)
+        ncommit = sel.sum(-1).astype(jnp.int32)
+    new_state, done = env_lib.commit_rule(problem)(state, sel)
+    return new_state, done, ncommit
+
+
 @functools.partial(jax.jit,
                    static_argnames=("rep", "problem", "num_layers",
                                     "use_adaptive"))
@@ -82,23 +99,32 @@ def _inference_step(params: PolicyParams, state, *, rep: GraphRep,
     """One policy evaluation + top-d commit (Alg. 4 body, vectorized over B).
 
     Identical on both representations: the backend supplies the scores,
-    the env registry the commit/termination rule; only the state layout
-    differs.  Finished graphs (no candidates) commit nothing.
+    the env registry the selection/commit/termination rules; only the
+    state layout differs.  Finished graphs (no candidates) commit nothing.
     """
     scores = rep.scores(params, state, num_layers=num_layers)  # (B, N) masked
-    sel, ncommit = select_top_d(scores, state.candidate, use_adaptive)
-    new_state, done = env_lib.commit_rule(problem)(state, sel)
-    return new_state, done, ncommit
+    return apply_selection(state, scores, state.candidate, use_adaptive,
+                           problem)
 
 
 def init_solve_state(rep: GraphRep, adj, problem: str = "mvc"):
     """Fresh solve state in ``rep``'s layout, carrying the env's residual
-    semantics (MaxCut on the sparse path must score the ORIGINAL topology,
-    so its state is flagged non-residual — see ``env.register``)."""
+    mode (MaxCut/MDS on the sparse path must score the ORIGINAL topology;
+    MIS scores the closed-neighborhood residual — see ``env.register``)
+    and the env's candidate derivation.
+
+    Enforces the padding-safety contract before any compute: an env whose
+    candidate rule could admit degree-0 (padding) nodes is rejected here
+    with an actionable error (``env.ensure_padding_safe``)."""
+    env_lib.ensure_padding_safe(problem)
     state = rep.init_state(adj)
-    if (isinstance(state, SparseGraphState)
-            and not env_lib.residual_semantics(problem)):
-        state = dataclasses.replace(state, residual=False)
+    if isinstance(state, SparseGraphState):
+        flag = env_lib.sparse_residual_flag(problem)
+        if state.residual != flag:
+            state = dataclasses.replace(state, residual=flag)
+    cand_fn = env_lib.candidate_rule(problem)
+    if cand_fn is not None:
+        state = dataclasses.replace(state, candidate=cand_fn(state))
     return state
 
 
@@ -173,6 +199,33 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
     sol = np.asarray(state.solution)
     return InferenceResult(solution=sol, sizes=sol.sum(-1).astype(np.int64),
                            policy_evals=evals, nodes_committed=committed)
+
+
+def best_trajectory_cut(params: PolicyParams, adj0, *, num_layers: int = 2,
+                        multi_node: bool = True) -> np.ndarray:
+    """(B,) best MaxCut value along the RL commit trajectory.
+
+    The maxcut env terminates when no candidate remains — every
+    positive-degree node eventually joins S, so the FINAL assignment's cut
+    is trivially 0 and quality lives in the trajectory.  Runs the
+    host-driven loop (the fused engine returns only the final state) and
+    records the cut after every commit."""
+    from . import env as env_lib
+    adj0 = np.asarray(adj0, np.float32)
+    ja = jnp.asarray(adj0)
+    best = np.zeros(adj0.shape[0])
+
+    def recording_step(p, s):
+        out = _inference_step(p, s, rep=get_rep("dense"), problem="maxcut",
+                              num_layers=num_layers,
+                              use_adaptive=multi_node)
+        np.maximum(best, np.asarray(env_lib.cut_value(ja, out[0].solution)),
+                   out=best)
+        return out
+
+    solve(params, adj0, num_layers=num_layers, problem="maxcut",
+          engine="host", step_fn=recording_step)
+    return best
 
 
 def solve_with_config(params: PolicyParams, adj0, cfg: PolicyConfig, *,

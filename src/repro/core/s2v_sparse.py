@@ -30,13 +30,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .graphs import (SparseGraphBatch, SparseGraphState, residual_edge_mask,
+from .graphs import (SparseGraphBatch, SparseGraphState,
+                     closed_neighborhood_keep, residual_edge_mask,
                      sparse_batch_from_dense)
 from .policy import PolicyParams
 from .qmodel import scores_local, NEG_INF
 
 __all__ = ["SparseGraphBatch", "sparse_batch_from_dense", "embed_sparse",
            "embed_sparse_local", "residual_edge_factors",
+           "closed_edge_factors", "edge_factors",
            "sparse_policy_scores", "sparse_state_bytes"]
 
 
@@ -62,6 +64,50 @@ def residual_edge_factors(nbr_local: jax.Array, valid_local: jax.Array,
     keep_pad = jnp.pad(keep_full, ((0, 0), (0, 1)))          # sentinel slot
     keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_pad, nbr_local)
     return valid_local.astype(jnp.float32) * keep_nbr * keep_local[:, :, None]
+
+
+def closed_edge_factors(nbr_local: jax.Array, valid_local: jax.Array,
+                        sol_local: jax.Array, *,
+                        axis: Optional[str] = None) -> jax.Array:
+    """(B, Nl, D) CLOSED-neighborhood residual-edge factors (MIS): an edge
+    survives iff neither endpoint is in S nor adjacent to S.
+
+    Distributed (``axis`` named): the S slice is all-gathered once so each
+    device can mark its resident nodes adjacent to S, then the resulting
+    per-node ``keep`` factors are all-gathered (a second (B, N) broadcast
+    over ``graph``) so the local gather sees REMOTE endpoints' keeps.
+    ``axis=None`` is the single-device case (Nl == N)."""
+    val = valid_local.astype(jnp.float32)
+    if axis is None:
+        keep_local = closed_neighborhood_keep(nbr_local, valid_local,
+                                              sol_local)
+        keep_full = keep_local
+    else:
+        sol_full = lax.all_gather(sol_local, axis, axis=1, tiled=True)
+        sol_pad = jnp.pad(sol_full, ((0, 0), (0, 1)))        # sentinel slot
+        s_nbr = jax.vmap(lambda sb, nb: sb[nb])(sol_pad, nbr_local)
+        any_nbr = (val * s_nbr).max(-1)
+        keep_local = (1.0 - sol_local) * (1.0 - any_nbr)
+        keep_full = lax.all_gather(keep_local, axis, axis=1, tiled=True)
+    keep_pad = jnp.pad(keep_full, ((0, 0), (0, 1)))
+    keep_nbr = jax.vmap(lambda kb, nb: kb[nb])(keep_pad, nbr_local)
+    return val * keep_nbr * keep_local[:, :, None]
+
+
+def edge_factors(nbr_local: jax.Array, valid_local: jax.Array,
+                 sol_local: jax.Array, residual, *,
+                 axis: Optional[str] = None) -> jax.Array:
+    """Edge-factor dispatch on the env's residual mode (``env.register``):
+    ``True``/``"solution"`` → S's edges removed; ``"closed"`` → S's and
+    its neighbors' edges removed (MIS); ``False``/``"none"`` → the
+    original topology (MaxCut/MDS)."""
+    if residual is False or residual == "none":
+        return valid_local.astype(jnp.float32)
+    if residual == "closed":
+        return closed_edge_factors(nbr_local, valid_local, sol_local,
+                                   axis=axis)
+    return residual_edge_factors(nbr_local, valid_local, sol_local,
+                                 axis=axis)
 
 
 def _gather_neighbors(x: jax.Array, nbrs: jax.Array) -> jax.Array:
@@ -127,17 +173,15 @@ def embed_sparse_local(params, nbr_local: jax.Array, edge_local: jax.Array,
 
 
 def embed_sparse(params, g, sol: jax.Array, *, num_layers: int,
-                 residual: bool = True,
+                 residual=True,
                  gather_impl: Optional[Callable] = None) -> jax.Array:
-    """Single-device convenience wrapper: derives the residual-edge factors
-    from (topology, S) and embeds all N nodes.  ``g`` is anything carrying
-    ``neighbors``/``valid`` — a SparseGraphBatch or SparseGraphState.
-    ``residual=False`` embeds the original topology instead (MaxCut
-    semantics — selecting a node does not delete edges)."""
-    if residual:
-        edge = residual_edge_factors(g.neighbors, g.valid, sol, axis=None)
-    else:
-        edge = g.valid.astype(jnp.float32)
+    """Single-device convenience wrapper: derives the edge factors for the
+    env's ``residual`` mode from (topology, S) and embeds all N nodes.
+    ``g`` is anything carrying ``neighbors``/``valid`` — a
+    SparseGraphBatch or SparseGraphState.  ``residual=False`` embeds the
+    original topology (MaxCut/MDS — selecting a node deletes no edges);
+    ``"closed"`` drops S and its neighbors (MIS)."""
+    edge = edge_factors(g.neighbors, g.valid, sol, residual, axis=None)
     return embed_sparse_local(params, g.neighbors, edge, sol,
                               num_layers=num_layers, axis=None,
                               gather_impl=gather_impl)
@@ -145,7 +189,7 @@ def embed_sparse(params, g, sol: jax.Array, *, num_layers: int,
 
 def sparse_policy_scores(params: PolicyParams, g, sol: jax.Array,
                          cand: jax.Array, *, num_layers: int,
-                         masked: bool = True, residual: bool = True,
+                         masked: bool = True, residual=True,
                          gather_impl: Optional[Callable] = None) -> jax.Array:
     emb = embed_sparse(params.em, g, sol, num_layers=num_layers,
                        residual=residual, gather_impl=gather_impl)

@@ -1,9 +1,14 @@
-"""Classical MVC baselines the paper compares against.
+"""Classical baselines the paper compares against, for the whole problem
+suite (MVC, MaxCut, MIS, MDS).
 
-The paper uses IBM-CPLEX (0.5 h cutoff) for reference optima; offline we
-provide: exact branch-and-bound (small N), greedy max-degree heuristic,
+The paper uses IBM-CPLEX (0.5 h cutoff) for MVC reference optima; offline
+we provide: exact branch-and-bound (small N), greedy max-degree heuristic,
 the maximal-matching 2-approximation, and a matching lower bound used when
-exact search is infeasible (DESIGN.md §7 notes the deviation).
+exact search is infeasible (DESIGN.md §7 notes the deviation).  For the
+extension environments, the matching batched greedy heuristics: min-degree
+greedy MIS, greedy set-cover MDS, and positive-gain greedy MaxCut — all
+following the padding convention (isolated nodes are not problem nodes:
+never picked, never requiring domination; DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -88,6 +93,113 @@ def matching_2approx_batch(adj_batch: np.ndarray,
         sol[act, eu[act, first[act]]] = True
         sol[act, ev[act, first[act]]] = True
         alive[act, first[act]] = False
+
+
+def greedy_mis(adj: np.ndarray) -> np.ndarray:
+    """Min-degree greedy maximum independent set. adj: (N, N) → (N,) mask."""
+    return greedy_mis_batch(adj[None])[0]
+
+
+def greedy_mis_batch(adj_batch: np.ndarray) -> np.ndarray:
+    """Batched min-degree greedy MIS: (B, N, N) → (B, N) masks.
+
+    Each round picks, per graph, the eligible node of minimum residual
+    degree (first-min tie-breaking), adds it to S and removes it plus its
+    neighbors.  Eligible nodes are the surviving ORIGINALLY-positive-degree
+    nodes — nodes isolated by earlier removals are free picks, but
+    originally-isolated padding nodes never enter (the serving
+    convention)."""
+    a = np.asarray(adj_batch, np.float32).copy()
+    b, n, _ = a.shape
+    sol = np.zeros((b, n), bool)
+    alive = a.sum(-1) > 0                     # (B, N) eligible pool
+    while alive.any():
+        deg = a.sum(-1)
+        key = np.where(alive, deg, np.inf)
+        v = key.argmin(-1)                    # (B,) first min per graph
+        act = np.flatnonzero(alive.any(-1))
+        sol[act, v[act]] = True
+        # drop the pick and its current neighbors from play
+        removed = a[act, v[act], :] > 0
+        removed[np.arange(len(act)), v[act]] = True
+        alive[act] &= ~removed
+        keep = (~removed).astype(np.float32)
+        a[act] *= keep[:, None, :] * keep[:, :, None]
+    return sol
+
+
+def greedy_mds(adj: np.ndarray) -> np.ndarray:
+    """Greedy set-cover minimum dominating set. adj: (N, N) → (N,) mask."""
+    return greedy_mds_batch(adj[None])[0]
+
+
+def greedy_mds_batch(adj_batch: np.ndarray) -> np.ndarray:
+    """Batched greedy set-cover MDS: (B, N, N) → (B, N) masks.
+
+    Each round picks, per graph, the node whose closed neighborhood covers
+    the most still-undominated positive-degree nodes (first-max
+    tie-breaking).  Isolated nodes count as already dominated (padding
+    convention), so they are neither picked nor waited on."""
+    a = np.asarray(adj_batch, np.float32)
+    b, n, _ = a.shape
+    sol = np.zeros((b, n), bool)
+    need = a.sum(-1) > 0
+    covered = ~need                           # isolated: born satisfied
+    while True:
+        uncov = (need & ~covered).astype(np.float32)
+        active = uncov.any(-1)
+        if not active.any():
+            return sol
+        gain = uncov + np.einsum("bnm,bm->bn", a, uncov)
+        gain[sol] = -1.0                      # never re-pick
+        v = gain.argmax(-1)
+        act = np.flatnonzero(active)
+        sol[act, v[act]] = True
+        newly = a[act, v[act], :] > 0
+        newly[np.arange(len(act)), v[act]] = True
+        covered[act] |= newly
+
+
+def greedy_maxcut(adj: np.ndarray) -> np.ndarray:
+    """Positive-gain greedy cut. adj: (N, N) → (N,) side-assignment mask."""
+    return greedy_maxcut_batch(adj[None])[0]
+
+
+def greedy_maxcut_batch(adj_batch: np.ndarray) -> np.ndarray:
+    """Batched greedy MaxCut: (B, N, N) → (B, N) side masks.
+
+    Starting from S = ∅, each round moves the node with the largest
+    positive gain (edges to V\\S minus edges to S = deg − 2·deg_to_S) into
+    S; stops when no move improves the cut.  Evaluate with
+    ``repro.core.env.cut_value``."""
+    a = np.asarray(adj_batch, np.float32)
+    b, n, _ = a.shape
+    side = np.zeros((b, n), bool)
+    deg = a.sum(-1)
+    while True:
+        to_s = np.einsum("bnm,bm->bn", a, side.astype(np.float32))
+        gain = np.where(side, -np.inf, deg - 2.0 * to_s)
+        active = (gain > 0).any(-1)
+        if not active.any():
+            return side
+        v = gain.argmax(-1)
+        act = np.flatnonzero(active)
+        side[act, v[act]] = True
+
+
+def heuristic_batch(problem: str, adj_batch: np.ndarray) -> np.ndarray:
+    """The matching per-env greedy baseline (problem_suite quality evals):
+    max-degree greedy cover (mvc), min-degree greedy independent set
+    (mis), greedy set-cover domination (mds), positive-gain greedy cut
+    (maxcut).  (B, N, N) → (B, N) masks."""
+    table = {"mvc": greedy_mvc_batch, "mis": greedy_mis_batch,
+             "mds": greedy_mds_batch, "maxcut": greedy_maxcut_batch}
+    try:
+        fn = table[problem]
+    except KeyError:
+        raise ValueError(f"no heuristic baseline registered for "
+                         f"{problem!r}; available: {sorted(table)}") from None
+    return fn(adj_batch)
 
 
 def mvc_lower_bound(adj: np.ndarray, seed: int = 0) -> int:

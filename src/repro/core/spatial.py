@@ -30,6 +30,7 @@ layout, so every pre-mesh caller keeps working unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -40,10 +41,11 @@ from jax.sharding import PartitionSpec as P
 
 from .mesh import (DATA, GRAPH, DENSE_STATE_SPECS, SPARSE_STATE_SPECS,
                    SCORES_SPEC, TUPLE_SPEC, make_mesh, mesh_shape,
-                   per_device_bytes, sparse_per_device_bytes)   # noqa: F401
+                   per_device_bytes, sparse_per_device_bytes,
+                   state_field_specs)   # noqa: F401
 from .policy import PolicyParams, policy_scores
 from .qmodel import scores_local
-from .s2v_sparse import embed_sparse_local, residual_edge_factors
+from .s2v_sparse import edge_factors, embed_sparse_local
 
 AXIS = GRAPH     # node-sharding axis name used by the per-layer collectives
 
@@ -99,7 +101,7 @@ def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
 
 
 def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
-                             gather_impl=None, *, residual: bool = True):
+                             gather_impl=None, *, residual=True):
     """Build the mesh-partitioned scorer on distributed sparse storage.
 
     in:  neighbors (B, N, D) int32, valid (B, N, D) bool, sol (B, N),
@@ -108,9 +110,11 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
          rows of its resident nodes]
     out: scores (B, N), replicated over ``graph``, batch over ``data``.
 
-    ``residual=False`` scores the ORIGINAL topology (MaxCut semantics —
+    ``residual`` is the env's topology mode (``env.register``):
+    ``False``/``"none"`` scores the ORIGINAL topology (MaxCut/MDS —
     committing a node deletes no edges), skipping the solution-mask
-    all-gather that the residual-edge factors need.
+    all-gather the residual-edge factors need; ``"closed"`` removes S and
+    its neighbors (MIS — one extra (B, N) keep all-gather over ``graph``).
     """
 
     from ..sharding.compat import shard_map_nocheck
@@ -121,13 +125,10 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
         out_specs=SCORES_SPEC,
     )
     def scorer(params: PolicyParams, nbr_l, valid_l, sol_l, cand_l):
-        if residual:
-            # Residual-edge factors need keep[] of REMOTE neighbor
-            # endpoints (paper §5.1's C/S broadcast) — the shared helper
-            # all-gathers the local S slice over the graph axis.
-            edge_l = residual_edge_factors(nbr_l, valid_l, sol_l, axis=AXIS)
-        else:
-            edge_l = valid_l.astype(jnp.float32)
+        # Edge factors need keep[] of REMOTE neighbor endpoints (paper
+        # §5.1's C/S broadcast) — the shared helper all-gathers the local
+        # S (and, for "closed", keep) slices over the graph axis.
+        edge_l = edge_factors(nbr_l, valid_l, sol_l, residual, axis=AXIS)
         emb_l = embed_sparse_local(params.em, nbr_l, edge_l, sol_l,
                                    num_layers=num_layers, axis=AXIS,
                                    gather_impl=gather_impl)
@@ -142,7 +143,7 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
 
 
 def spatial_solve_scores_fn(mesh: jax.sharding.Mesh, *, num_layers: int,
-                            rep, residual: bool = True):
+                            rep, residual=True):
     """State-in, scores-out wrapper around the mesh-partitioned scorers for
     the FUSED solve loop (DESIGN.md §9): takes the solve state (batch
     sharded over ``data`` by the engine), reshards its arrays onto the
@@ -163,8 +164,27 @@ def spatial_solve_scores_fn(mesh: jax.sharding.Mesh, *, num_layers: int,
                                         state.candidate)
 
 
+# Staging scopes for the GSPMD workaround below (DESIGN.md §10): which
+# minibatch operands get replicated at the shard_map boundary on full 2-D
+# (dp>1 ∧ sp>1) meshes.  "live" (the default) stages exactly the operands
+# that are LIVE in the GD loss — topology, solution, action, target; the
+# candidate mask is dead there (training scores run masked=False) and
+# leave-one-out measurement shows it is the ONLY operand that can stay
+# partitioned without resurfacing the mispartitioning.  "all" is the PR 4
+# behavior (entire minibatch, candidate included); "none" disables the
+# workaround — used by the canary test that watches the upstream jax bug.
+STAGE_SCOPES = ("live", "all", "none")
+
+# Test hook (the tests/test_mesh.py canary): overrides the default scope
+# chosen when ``stage_boundary`` is None.  Callers flipping this must
+# clear the engine's step cache (``engine._build_train_step.cache_clear``)
+# — the cached fused steps baked in the previous scope.
+_STAGE_OVERRIDE: Optional[str] = None
+
+
 def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
-                               num_layers: int, lr: float, jit: bool = True):
+                               num_layers: int, lr: float, jit: bool = True,
+                               stage_boundary: Optional[str] = None):
     """Build the mesh-parallel GD step (paper Alg. 5's per-GPU gradient
     descent + MPI_All_reduce, generalized to the 2-D mesh; DESIGN.md
     §8/§10).
@@ -233,11 +253,8 @@ def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
             my = lax.axis_index(AXIS)
 
             def loss_fn(p):
-                if residual:
-                    edge_l = residual_edge_factors(nbr_l, val_l, sol_l,
-                                                   axis=AXIS)
-                else:
-                    edge_l = val_l.astype(jnp.float32)
+                edge_l = edge_factors(nbr_l, val_l, sol_l, residual,
+                                      axis=AXIS)
                 emb_l = embed_sparse_local(p.em, nbr_l, edge_l, sol_l,
                                            num_layers=num_layers, axis=AXIS)
                 s_l = scores_local(p.q, emb_l, cand_l, axis=AXIS,
@@ -256,25 +273,36 @@ def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
     # operands produced by in-jit gathers (replay sample → Tuples2Graphs)
     # and fed straight into shard_map get mispartitioned by GSPMD on the
     # JAX versions this repo supports (observed on 0.4.x CPU: wrong
-    # operand slices, order-1e-4 loss errors — see tests/test_mesh.py).
-    # Staging the (small) minibatch replicated at the shard_map boundary
-    # restores exactness; the in_specs still tile all GD compute per
-    # device.  1-D meshes are unaffected and keep the partitioned operand
-    # layout (per-device minibatch memory stays O(1/P), §5.2).
-    if dp > 1 and mesh.shape[GRAPH] > 1:
-        _stage_sharding = jax.sharding.NamedSharding(mesh, P())
+    # operand slices, order-1e-3 loss/param errors — see the canary in
+    # tests/test_mesh.py).  Staging the loss's LIVE operands replicated at
+    # the shard_map boundary restores exactness; the in_specs still tile
+    # all GD compute per device.  Per-operand leave-one-out measurement
+    # (DESIGN.md §10): topology, solution, action and target are each
+    # individually required; the candidate mask — dead in the GD loss
+    # (masked=False scores) — is the only operand that can keep its
+    # partitioned layout.  1-D meshes are unaffected and keep the fully
+    # partitioned operand layout (per-device minibatch memory stays
+    # O(1/P), §5.2).
+    if stage_boundary is not None and stage_boundary not in STAGE_SCOPES:
+        raise ValueError(f"stage_boundary must be one of {STAGE_SCOPES} "
+                         f"or None, got {stage_boundary!r}")
+    scope = stage_boundary if stage_boundary is not None else _STAGE_OVERRIDE
+    if scope is None:
+        scope = "live" if dp > 1 and mesh.shape[GRAPH] > 1 else "none"
+    _stage_sharding = jax.sharding.NamedSharding(mesh, P())
 
-        def _stage(x):
-            return jax.lax.with_sharding_constraint(x, _stage_sharding)
-    else:
-        def _stage(x):
-            return x
+    def _stage(x):
+        return jax.lax.with_sharding_constraint(x, _stage_sharding)
 
     def fn(params, opt, state, action, target):
         _check_divisible(mesh, state.candidate.shape[0],
                          state.candidate.shape[1], "spatial GD")
-        state = jax.tree.map(_stage, state)
-        action, target = _stage(action), _stage(target)
+        if scope in ("all", "live"):
+            staged = {f: _stage(getattr(state, f))
+                      for f in state_field_specs(state)
+                      if scope == "all" or f != "candidate"}
+            state = dataclasses.replace(state, **staged)
+            action, target = _stage(action), _stage(target)
         if isinstance(state, SparseGraphState):
             key = ("sparse", state.residual)
             if key not in built:

@@ -42,12 +42,20 @@ class TrainLog:
 def evaluate_quality(agent: Agent, test_adj: np.ndarray,
                      reference_sizes: np.ndarray, *,
                      multi_node: bool = False,
-                     rep: Union[str, GraphRep, None] = None) -> float:
+                     rep: Union[str, GraphRep, None] = None,
+                     problem: str = "mvc") -> float:
     """Average approximation ratio |RL solution| / |reference| (paper §6.2).
-    ``rep=None`` follows the agent's configured backend."""
+    ``rep=None`` follows the agent's configured backend.  For ``"max"``
+    sense environments (MIS) a ratio < 1 means the RL solution is smaller
+    than the reference — callers compare accordingly."""
+    if problem == "maxcut":
+        raise ValueError(
+            "maxcut quality is not a solution-size ratio (the env assigns "
+            "every positive-degree node, so |S| is policy-independent) — "
+            "use repro.core.inference.best_trajectory_cut instead")
     rep = get_rep(rep if rep is not None else agent.cfg.graph_rep)
     res = solve(agent.params, test_adj, num_layers=agent.cfg.num_layers,
-                multi_node=multi_node, rep=rep,
+                multi_node=multi_node, rep=rep, problem=problem,
                 engine=getattr(agent.cfg, "engine", "device"))
     return float(np.mean(res.sizes / np.maximum(reference_sizes, 1)))
 
@@ -85,7 +93,8 @@ def train_agent(
     rng = np.random.default_rng(seed)
     rep = get_rep(rep if rep is not None else agent.cfg.graph_rep)
     step_fn = env_lib.make(problem)
-    residual = env_lib.residual_semantics(problem)
+    residual = env_lib.residual_mode(problem)
+    cand_fn = env_lib.candidate_rule(problem)
     # Dataset in the chosen representation, device-resident once (sparse:
     # (G, N, D) neighbor lists — the paper's compressed training storage).
     source = rep.prepare_dataset(train_adj)
@@ -108,7 +117,7 @@ def train_agent(
         gi = rng.integers(0, g_count, size=batch_graphs)
         state = rep.state_from_tuples(
             source, gi, np.zeros((batch_graphs, n), np.float32),
-            residual=residual)
+            residual=residual, candidate_fn=cand_fn)
         gi_dev = jnp.asarray(gi, jnp.int32)
         ep_len = 0
         for _t in range(n):
@@ -125,7 +134,8 @@ def train_agent(
                 new_state, reward, done = step_fn(state, jnp.asarray(action))
                 agent.remember(gi, state, action, np.asarray(reward),
                                new_state, np.asarray(done))
-                loss = agent.train(source, tau=tau, residual=residual)
+                loss = agent.train(source, tau=tau, residual=residual,
+                                   candidate_fn=cand_fn)
                 state = new_state
             ep_len += 1
             total_steps += 1

@@ -23,7 +23,14 @@ def main():
     ap.add_argument("--sizes", default="12,20,28",
                     help="comma-separated node counts the stream mixes")
     ap.add_argument("--kind", choices=["er", "ba", "social"], default="er")
-    ap.add_argument("--problem", choices=["mvc", "maxcut"], default="mvc")
+    ap.add_argument("--problem", default="mvc",
+                    choices=["mvc", "maxcut", "mis", "mds"],
+                    help="registered environment to solve: mvc (min vertex "
+                         "cover), maxcut (max cut), mis (max independent "
+                         "set), mds (min dominating set); all four serve "
+                         "through the same padded buckets — the registry's "
+                         "padding-safety contract guarantees isolated "
+                         "padding nodes never score or commit")
     ap.add_argument("--rep", choices=["dense", "sparse"], default="dense")
     ap.add_argument("--spatial", default="0",
                     help="2-D (data, graph) mesh spec: 'dp,sp' shards each "

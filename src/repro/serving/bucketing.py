@@ -10,10 +10,19 @@ ever, no matter what sizes the traffic mixes.
 
 Padding is by isolated nodes: a zero row/column in the adjacency gives the
 padding node degree 0, so it is never a candidate, never scores, never
-commits, and never changes ``done`` — for covering AND assignment
-environments alike (both derive candidates from degree > 0 at init).
-Unused batch rows are empty (edge-free) graphs: they are born done and
-commit nothing, so they only cost compute, never correctness.
+commits, and never changes ``done``.  Unused batch rows are empty
+(edge-free) graphs: they are born done and commit nothing, so they only
+cost compute, never correctness.
+
+That padding-node property is NOT assumed — it is an enforced registry
+contract (``repro.core.env.ensure_padding_safe``): every environment a
+plan targets must prove its candidate derivation excludes degree-0 nodes
+(probed once per env against the real candidate path), otherwise
+``plan_batches`` rejects the request up front with an actionable error.
+Environments where isolated nodes would naively be actionable (MDS: a
+truly-isolated node must dominate itself) are registered with the padding
+convention instead — isolated nodes count as already satisfied — which is
+what makes them servable through padded buckets at all (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -59,7 +68,14 @@ def plan_batches(requests: Sequence, max_batch: int,
                  min_bucket: int = MIN_BUCKET) -> List[BatchPlan]:
     """Group pending requests by (bucket, problem) and cut fixed-size
     batches.  Every plan's batch dim is exactly ``max_batch`` (unused rows
-    are empty graphs) so each bucket compiles once."""
+    are empty graphs) so each bucket compiles once.
+
+    Enforces the padding-safety contract per target environment BEFORE
+    any padding happens: an env whose candidate set could admit degree-0
+    (padding) nodes raises here rather than silently mis-solving."""
+    from ..core import env as env_lib
+    for problem in {req.problem for req in requests}:
+        env_lib.ensure_padding_safe(problem)
     groups: Dict[Tuple[int, str], List] = {}
     for req in requests:
         key = (bucket_nodes(req.n, min_bucket), req.problem)

@@ -121,7 +121,11 @@ class GraphSolverService:
 
     # -- request queue ------------------------------------------------------
     def submit(self, adj: np.ndarray, problem: str = "mvc") -> int:
-        """Enqueue one graph; returns the request id."""
+        """Enqueue one graph; returns the request id.  Rejects unknown and
+        padding-unsafe environments up front (``env.ensure_padding_safe``)
+        instead of failing mid-drain with other requests in flight."""
+        from ..core import env as env_lib
+        env_lib.ensure_padding_safe(problem)
         adj = np.asarray(adj, np.float32)
         if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
             raise ValueError(f"expected a square (n, n) adjacency, "

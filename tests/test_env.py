@@ -9,7 +9,7 @@ from repro.core.env import mvc_step, maxcut_step, is_cover
 
 
 def test_registry():
-    assert "mvc" in env_lib.names() and "maxcut" in env_lib.names()
+    assert {"mvc", "maxcut", "mis", "mds"} <= set(env_lib.names())
 
 
 def test_mvc_step_basic():

@@ -44,7 +44,7 @@ def test_init_state_parity():
                                   np.asarray(ss.solution))
 
 
-@pytest.mark.parametrize("problem", ["mvc", "maxcut"])
+@pytest.mark.parametrize("problem", ["mvc", "maxcut", "mis", "mds"])
 def test_env_step_parity(problem):
     """Registered env steps accept both representations and agree on
     (solution, candidate, reward, done) for identical action streams."""

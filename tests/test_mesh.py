@@ -165,6 +165,64 @@ def test_serving_2d_mesh_solutions_valid():
 
 @multidevice
 @needs4
+@pytest.mark.parametrize("problem", ["mis", "mds"])
+@pytest.mark.parametrize("rep_name", ["dense", "sparse"])
+def test_new_env_solve_parity_across_mesh_shapes(problem, rep_name):
+    """The extension environments ride the same 2-D mesh contract: one
+    full adaptive solve is bit-identical across every mesh shape and
+    checker-feasible, on both representations."""
+    from repro.core import env as env_lib
+    adj = random_graph_batch("er", 16, 4, seed=0, rho=0.3)
+    params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=8))
+    ref = solve(params, adj, num_layers=2, multi_node=True, rep=rep_name,
+                problem=problem, engine="host")
+    assert np.asarray(env_lib.checker(problem)(
+        jnp.asarray(adj), jnp.asarray(ref.solution))).all()
+    for spec in MESHES:
+        res = solve(params, adj, num_layers=2, multi_node=True,
+                    rep=rep_name, problem=problem, engine="device",
+                    spatial=spec)
+        assert (res.solution == ref.solution).all(), spec
+        assert res.policy_evals == ref.policy_evals, spec
+
+
+@multidevice
+@needs4
+def test_gspmd_mispartitioning_canary():
+    """Canary for the upstream jax GSPMD bug behind the DESIGN.md §10
+    staging workaround: with boundary staging DISABLED, the (2,2) fused
+    train step must still diverge from the single-device reference on the
+    jax versions this repo pins.
+
+    If this test ever fails because the unstaged run MATCHES the
+    reference, the upstream mispartitioning is fixed on the installed jax
+    — retire the workaround: drop the "live" staging scope default in
+    `spatial.spatial_train_minibatch_fn` and delete this canary.  (The
+    workaround's own correctness — staged (2,2) == (1,1) — is enforced by
+    test_train_step_parity_across_mesh_shapes above.)
+    """
+    from repro.core import engine as engine_mod
+    from repro.core import spatial as spatial_mod
+    base, _ = _train_params("dense", 0)
+    try:
+        spatial_mod._STAGE_OVERRIDE = "none"
+        engine_mod._build_train_step.cache_clear()
+        unstaged, _ = _train_params("dense", (2, 2))
+    finally:
+        spatial_mod._STAGE_OVERRIDE = None
+        engine_mod._build_train_step.cache_clear()
+    dmax = max(float(np.abs(a - b).max())
+               for a, b in zip(jax.tree.leaves(base),
+                               jax.tree.leaves(unstaged)))
+    assert dmax > 1e-6, (
+        f"unstaged (2,2) fused train step now matches the single-device "
+        f"reference (max param delta {dmax:.2e}) — the upstream GSPMD "
+        f"mispartitioning appears FIXED on this jax version; retire the "
+        f"boundary-staging workaround (DESIGN.md §10)")
+
+
+@multidevice
+@needs4
 def test_replay_and_state_actually_sharded_over_mesh():
     """The memory claim behind the 2-D mesh: with dp=2 the device-resident
     replay holds half the tuple rows per device, and sp=2 halves the mask

@@ -1,0 +1,326 @@
+"""Problem-suite hardening (DESIGN.md §11): MVC + MaxCut + MIS + MDS
+through every layer — env steps and commit rules on both GraphRep
+backends, host vs fused engine bit-parity, checker-verified feasibility,
+the enforced candidate-derivation/padding-safety contract, padded serving
+round-trips for the new environments, and fused-train smoke."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Agent, PolicyConfig, engine_init, get_rep,
+                        get_train_step, init_policy, random_graph_batch,
+                        solve)
+from repro.core import env as env_lib
+from repro.core.env import (cut_value, is_dominating_set,
+                            is_independent_set, mds_candidates)
+from repro.core.graphs import erdos_renyi, init_state
+from repro.core.inference import init_solve_state
+from repro.core.solvers import (greedy_maxcut_batch, greedy_mds_batch,
+                                greedy_mis_batch, heuristic_batch)
+
+PROBLEMS = ("mvc", "maxcut", "mis", "mds")
+REPS = ("dense", "sparse")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    adj = random_graph_batch("er", 24, 4, seed=0, rho=0.25)
+    params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=8))
+    return adj, params
+
+
+def test_registry_declares_full_suite():
+    assert set(PROBLEMS) <= set(env_lib.names())
+    assert env_lib.residual_mode("mvc") == "solution"
+    assert env_lib.residual_mode("maxcut") == "none"
+    assert env_lib.residual_mode("mis") == "closed"
+    assert env_lib.residual_mode("mds") == "none"
+    assert env_lib.sense("mis") == "max" and env_lib.sense("mds") == "min"
+    assert env_lib.prune_rule("mis") is not None
+    assert env_lib.candidate_rule("mds") is mds_candidates
+
+
+# ---------------------------------------------------------------------------
+# Env-step semantics on hand-checked graphs.
+# ---------------------------------------------------------------------------
+
+def test_mis_step_removes_closed_neighborhood():
+    # path 0-1-2 plus isolated node 3: picking node 1 removes 0, 1, 2
+    a = np.zeros((4, 4), np.float32)
+    a[0, 1] = a[1, 0] = a[1, 2] = a[2, 1] = 1
+    s = init_state(jnp.asarray(a))
+    s2, r, done = env_lib.make("mis")(s, jnp.asarray([1]))
+    assert float(r[0]) == 1.0 and bool(done[0])
+    assert np.asarray(s2.solution)[0].tolist() == [0, 1, 0, 0]
+    assert np.asarray(s2.candidate)[0].sum() == 0     # 3 is padding, never in
+    assert np.asarray(s2.adj).sum() == 0              # closed nbhd removed
+
+
+def test_mis_residual_isolated_nodes_stay_candidates():
+    # star: center 0, leaves 1-3.  Picking leaf 1 removes {0, 1}; leaves
+    # 2 and 3 become residual-isolated but REMAIN eligible (free +1 each).
+    a = np.zeros((4, 4), np.float32)
+    a[0, 1:] = a[1:, 0] = 1
+    s = init_state(jnp.asarray(a))
+    s2, _, done = env_lib.make("mis")(s, jnp.asarray([1]))
+    assert not bool(done[0])
+    assert np.asarray(s2.candidate)[0].tolist() == [0, 0, 1, 1]
+    s3, r, done = env_lib.make("mis")(s2, jnp.asarray([2]))
+    assert float(r[0]) == 1.0 and not bool(done[0])
+    s4, _, done = env_lib.make("mis")(s3, jnp.asarray([3]))
+    assert bool(done[0])
+    assert np.asarray(s4.solution)[0].tolist() == [0, 1, 1, 1]
+
+
+def test_mds_step_covers_closed_neighborhood():
+    # path 0-1-2 plus isolated 3: node 1 dominates everything that needs it
+    a = np.zeros((4, 4), np.float32)
+    a[0, 1] = a[1, 0] = a[1, 2] = a[2, 1] = 1
+    s = init_solve_state(get_rep("dense"), a[None], "mds")
+    assert np.asarray(s.candidate)[0].tolist() == [1, 1, 1, 0]
+    s2, r, done = env_lib.make("mds")(s, jnp.asarray([1]))
+    assert float(r[0]) == -1.0 and bool(done[0])
+    assert bool(np.asarray(is_dominating_set(jnp.asarray(a)[None],
+                                             s2.solution))[0])
+    # a leaf pick does NOT finish (node 2 uncovered) and keeps useful
+    # candidates only
+    s3, _, done = env_lib.make("mds")(s, jnp.asarray([0]))
+    assert not bool(done[0])
+    assert np.asarray(s3.candidate)[0, 3] == 0
+
+
+def test_checkers_reject_infeasible():
+    a = np.zeros((1, 3, 3), np.float32)
+    a[0, 0, 1] = a[0, 1, 0] = 1
+    both = jnp.asarray([[1.0, 1.0, 0.0]])
+    none = jnp.asarray([[0.0, 0.0, 0.0]])
+    assert not bool(np.asarray(is_independent_set(jnp.asarray(a), both))[0])
+    assert not bool(np.asarray(is_dominating_set(jnp.asarray(a), none))[0])
+    assert float(cut_value(jnp.asarray(a),
+                           jnp.asarray([[1.0, 0.0, 0.0]]))[0]) == 1.0
+
+
+def test_mis_prune_drops_adjacent_picks_by_score():
+    """The raw top-d mask can contain adjacent nodes; the MIS prune must
+    keep the higher-scored one of each adjacent pair and every
+    independent pick — this is exactly what keeps d>1 MIS feasible."""
+    # triangle 0-1-2 plus isolated-from-them pair 3-4
+    a = np.zeros((5, 5), np.float32)
+    a[0, 1] = a[1, 0] = a[1, 2] = a[2, 1] = a[0, 2] = a[2, 0] = 1
+    a[3, 4] = a[4, 3] = 1
+    state = init_state(jnp.asarray(a))
+    sel = jnp.asarray([[1.0, 1.0, 0.0, 1.0, 1.0]])   # 0,1 adjacent; 3,4 too
+    scores = jnp.asarray([[0.9, 0.5, 0.1, 0.8, 0.2]])
+    kept = env_lib.mis_prune(state, sel, scores)
+    assert np.asarray(kept)[0].tolist() == [1.0, 0.0, 0.0, 1.0, 0.0]
+
+
+def test_mis_multi_node_solve_stays_independent(setup):
+    """End-to-end: adaptive multi-node MIS solves on dense random graphs
+    are checker-independent (infeasible without the prune hook)."""
+    adj = random_graph_batch("er", 30, 3, seed=7, rho=0.4)  # dense graphs
+    _, params = setup
+    res = solve(params, adj, num_layers=2, multi_node=True, problem="mis")
+    assert np.asarray(is_independent_set(
+        jnp.asarray(adj), jnp.asarray(res.solution))).all()
+    # every committed node lands in S (commit count == solution size)
+    np.testing.assert_array_equal(res.nodes_committed, res.sizes)
+
+
+# ---------------------------------------------------------------------------
+# Cross-product feasibility: every env × rep × engine (mesh shapes are
+# covered by the multidevice job in tests/test_mesh.py).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("problem", PROBLEMS)
+@pytest.mark.parametrize("rep", REPS)
+def test_solve_feasible_and_engine_parity(setup, problem, rep):
+    """`solve(..., problem=p)` returns checker-verified feasible solutions
+    on both backends and both engines, bit-identical host vs fused."""
+    adj, params = setup
+    host = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                 problem=problem, engine="host")
+    dev = solve(params, adj, num_layers=2, multi_node=True, rep=rep,
+                problem=problem, engine="device")
+    assert (host.solution == dev.solution).all()
+    assert host.policy_evals == dev.policy_evals
+    assert (host.nodes_committed == dev.nodes_committed).all()
+    ok = env_lib.checker(problem)(jnp.asarray(adj),
+                                  jnp.asarray(dev.solution))
+    assert np.asarray(ok).all()
+
+
+@pytest.mark.parametrize("problem", ["mis", "mds"])
+def test_dense_sparse_parity(setup, problem):
+    """The new envs keep the GraphRep contract: identical solutions and
+    eval counts through both representations."""
+    adj, params = setup
+    d = solve(params, adj, num_layers=2, multi_node=True, rep="dense",
+              problem=problem)
+    s = solve(params, adj, num_layers=2, multi_node=True, rep="sparse",
+              problem=problem)
+    np.testing.assert_array_equal(d.solution, s.solution)
+    assert d.policy_evals == s.policy_evals
+    np.testing.assert_array_equal(d.nodes_committed, s.nodes_committed)
+
+
+@pytest.mark.parametrize("problem", ["mis", "mds"])
+@pytest.mark.parametrize("rep", REPS)
+def test_fused_train_step_smoke(problem, rep):
+    """The fused act→env-step→remember→τ×GD cycle runs for the new envs on
+    both backends with finite warm losses."""
+    n = 14
+    adj = random_graph_batch("er", n, 4, seed=0, rho=0.3)
+    cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=8,
+                       replay_capacity=64, learning_rate=1e-3)
+    agent = Agent(cfg, num_nodes=n)
+    rep_obj = get_rep(rep)
+    fused = get_train_step(cfg, rep=rep_obj, problem=problem, tau=2,
+                           target_mode="stored")
+    es = engine_init(cfg, agent.params, agent.opt, n, seed=0)
+    source = rep_obj.prepare_dataset(adj)
+    gi = np.arange(4, dtype=np.int32)
+    state = rep_obj.state_from_tuples(
+        source, gi, np.zeros((4, n), np.float32),
+        residual=env_lib.residual_mode(problem),
+        candidate_fn=env_lib.candidate_rule(problem))
+    loss = np.nan
+    for _ in range(6):
+        es, state, _a, _r, _d, loss_d = fused(es, state, source,
+                                              jnp.asarray(gi))
+        loss = float(loss_d)
+    assert np.isfinite(loss)
+
+
+def test_train_agent_mds_smoke():
+    """The episode driver end-to-end on a new env (device engine), with
+    the env's candidate rule threading through replay re-materialization."""
+    from repro.core import train_agent
+    n = 12
+    train = random_graph_batch("er", n, 4, seed=0, rho=0.3)
+    cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=8,
+                       replay_capacity=256, learning_rate=1e-3)
+    agent = Agent(cfg, num_nodes=n)
+    log = train_agent(agent, train, problem="mds", episodes=3, tau=1,
+                      max_steps=20, seed=0)
+    assert len(log.losses) > 0 and np.isfinite(log.losses[-1])
+
+
+# ---------------------------------------------------------------------------
+# The padding-safety contract.
+# ---------------------------------------------------------------------------
+
+def _register_unsafe(name):
+    @env_lib.register(name, residual=False,
+                      candidates=lambda st: (st.solution < 0.5
+                                             ).astype(jnp.float32))
+    def _step(state, action):
+        b = state.candidate.shape[0]
+        return state, jnp.zeros((b,), jnp.float32), jnp.ones((b,), bool)
+    return _step
+
+
+def test_unsafe_env_rejected_at_init_solve_state(setup):
+    """An env whose candidate set can include degree-0 nodes must fail
+    fast at init_solve_state with an actionable error."""
+    adj, _params = setup
+    _register_unsafe("unsafe_probe_env")
+    try:
+        with pytest.raises(ValueError, match="padding-safety contract"):
+            init_solve_state(get_rep("dense"), adj, "unsafe_probe_env")
+    finally:
+        env_lib.unregister("unsafe_probe_env")
+
+
+def test_unsafe_env_rejected_at_plan_batches():
+    from repro.serving import SolveRequest, plan_batches
+    _register_unsafe("unsafe_probe_env2")
+    try:
+        reqs = [SolveRequest(id=0, adj=np.zeros((6, 6), np.float32), n=6,
+                             problem="unsafe_probe_env2")]
+        with pytest.raises(ValueError, match="padding-safety contract"):
+            plan_batches(reqs, max_batch=2)
+    finally:
+        env_lib.unregister("unsafe_probe_env2")
+
+
+def test_unknown_env_rejected_with_catalog():
+    with pytest.raises(ValueError, match="unknown environment"):
+        env_lib.ensure_padding_safe("not_a_problem")
+
+
+def test_registered_suite_is_padding_safe():
+    for problem in PROBLEMS:
+        env_lib.ensure_padding_safe(problem)      # must not raise
+
+
+# ---------------------------------------------------------------------------
+# Serving round-trips on padded buckets for the new envs.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("problem,check",
+                         [("mds", is_dominating_set),
+                          ("mis", is_independent_set)])
+def test_serving_round_trip_padded_buckets(problem, check):
+    """Mixed-size streams through the bucketing/padding service equal the
+    direct padded fused solve per request; isolated padding rows commit
+    nothing; every response is checker-feasible on its ORIGINAL graph."""
+    from repro.serving import (GraphSolverService, bucket_nodes,
+                               pad_adjacency)
+    cfg = PolicyConfig(embed_dim=8, num_layers=2)
+    params = init_policy(jax.random.key(3), cfg)
+    svc = GraphSolverService(params, cfg, max_batch=3)
+    sizes = [6, 11, 6, 19, 11]
+    adjs = [erdos_renyi(n, 0.3, seed=20 + i) for i, n in enumerate(sizes)]
+    responses = svc.serve(adjs, problem=problem)
+    for r, adj, n in zip(responses, adjs, sizes):
+        nb = bucket_nodes(n)
+        assert r.bucket == nb
+        direct = solve(params, pad_adjacency(adj, nb)[None], num_layers=2,
+                       multi_node=True, engine="device", problem=problem)
+        assert (r.solution == direct.solution[0, :n]).all()
+        assert direct.solution[0, n:].sum() == 0   # padding never selected
+        ok = check(jnp.asarray(adj)[None],
+                   jnp.asarray(r.solution, jnp.float32)[None])
+        assert bool(np.asarray(ok)[0])
+
+
+# ---------------------------------------------------------------------------
+# Batched heuristics.
+# ---------------------------------------------------------------------------
+
+def test_greedy_heuristics_feasible_and_sane():
+    adj = random_graph_batch("er", 24, 4, seed=5, rho=0.25)
+    ja = jnp.asarray(adj)
+    mis = greedy_mis_batch(adj)
+    assert np.asarray(is_independent_set(
+        ja, jnp.asarray(mis, jnp.float32))).all()
+    assert (mis.sum(-1) >= 1).all()
+    mds = greedy_mds_batch(adj)
+    assert np.asarray(is_dominating_set(
+        ja, jnp.asarray(mds, jnp.float32))).all()
+    cut = np.asarray(cut_value(ja, jnp.asarray(
+        greedy_maxcut_batch(adj), jnp.float32)))
+    # greedy cut is a local optimum: at least half the edges are cut
+    edges = adj.sum((-1, -2)) / 2
+    assert (cut >= edges / 2).all()
+
+
+def test_heuristics_ignore_padding_nodes():
+    """Padded graphs: heuristic masks never select isolated nodes, and MDS
+    never waits on them."""
+    a = erdos_renyi(10, 0.3, seed=3)
+    pad = np.zeros((16, 16), np.float32)
+    pad[:10, :10] = a
+    for fn in (greedy_mis_batch, greedy_mds_batch, greedy_maxcut_batch):
+        sol = fn(pad[None])[0]
+        assert sol[10:].sum() == 0, fn.__name__
+
+
+def test_heuristic_batch_dispatch():
+    adj = random_graph_batch("er", 12, 2, seed=1, rho=0.3)
+    for problem in PROBLEMS:
+        assert heuristic_batch(problem, adj).shape == (2, 12)
+    with pytest.raises(ValueError, match="no heuristic baseline"):
+        heuristic_batch("nope", adj)
