@@ -12,6 +12,15 @@ with dp at fixed global batch (the acceptance claim), and mask/neighbor
 rows with sp.  The §5.2 analytic model at the same shape is saved
 alongside for comparison.
 
+Each mesh shape also records PER-COLLECTIVE microbench columns — the
+workload's §5.1/§5.2 communication terms in isolation: the dense layer's
+(B, K, N) ``psum`` over ``graph``, the sparse layer's embedding
+``all_gather`` over ``graph``, the (B, N) solution-mask all-gather (the
+C/S broadcast), and the ``data``-axis gradient psum at policy-parameter
+size.  On the forced-CPU topology these measure dispatch/partitioning
+overhead rather than interconnect bandwidth; they are committed so
+shape-to-shape regressions are visible.
+
 JSON → experiments/bench/mesh_scaling.json.
 
   PYTHONPATH=src python -m benchmarks.mesh_scaling [--quick]
@@ -38,6 +47,52 @@ def _shard_nbytes(tree) -> int:
         if hasattr(leaf, "addressable_shards"):
             total += leaf.addressable_shards[0].data.nbytes
     return total
+
+
+def _collective_times(mesh, params, *, n: int, b: int, k: int = 16,
+                      repeat: int = 20) -> dict:
+    """Isolated per-collective timings on the (dp, sp) mesh: seconds per
+    call for each communication term the fused layers/train step issue.
+    Axis-size-1 collectives are omitted (they lower to no-ops)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core.mesh import DATA, GRAPH
+
+    dp, sp = mesh.shape[DATA], mesh.shape[GRAPH]
+    out = {}
+
+    def bench(name, fn, in_specs, out_specs, x):
+        f = jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False))
+        f(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            r = f(x)
+        r.block_until_ready()
+        out[name] = (time.perf_counter() - t0) / repeat
+
+    if sp > 1:
+        # dense layer line 12: all-reduce of the (B, K, N) partial sums
+        bench("psum_graph_bkn_s", lambda x: lax.psum(x, GRAPH), P(), P(),
+              jnp.zeros((b, k, n), jnp.float32))
+        # sparse layer: all-gather of the (B, K, N/P) embedding buffer
+        bench("all_gather_embed_s",
+              lambda x: lax.all_gather(x, GRAPH, axis=2, tiled=True),
+              P(None, None, GRAPH), P(),
+              jnp.zeros((b, k, n), jnp.float32))
+        # §5.1 C/S broadcast: all-gather of the (B, N/P) solution mask
+        bench("all_gather_solution_s",
+              lambda x: lax.all_gather(x, GRAPH, axis=1, tiled=True),
+              P(None, GRAPH), P(), jnp.zeros((b, n), jnp.float32))
+    if dp > 1:
+        # train step: gradient all-reduce over `data` at policy-param size
+        psize = int(sum(x.size for x in jax.tree.leaves(params)))
+        bench("psum_data_grads_s", lambda x: lax.psum(x, DATA), P(), P(),
+              jnp.zeros((psize,), jnp.float32))
+    return out
 
 
 def _measure_mesh(dp: int, sp: int, *, n: int, graphs: int, batch: int,
@@ -109,6 +164,8 @@ def _measure_mesh(dp: int, sp: int, *, n: int, graphs: int, batch: int,
 
     model = per_device_bytes(n=n, b=solve_batch, rho=rho, p=sp,
                              replay_tuples=cfg.replay_capacity, dp=dp)
+    coll = {} if mesh is None else _collective_times(
+        mesh, params, n=n, b=solve_batch, k=cfg.embed_dim)
     return {
         "train_s_per_step": train_s,
         "solve_s": solve_s,
@@ -116,6 +173,7 @@ def _measure_mesh(dp: int, sp: int, *, n: int, graphs: int, batch: int,
         "state_bytes_per_device": int(state_dev_bytes),
         "replay_bytes_per_device": int(replay_dev_bytes),
         "model_bytes_per_device": model,
+        "collectives_s_per_call": coll,
     }
 
 
@@ -172,6 +230,13 @@ def run(quick: bool = False):
             f"{r['solve_s']*1e3:.1f}ms state/dev "
             f"{r['state_bytes_per_device']/1024:.1f}KiB replay/dev "
             f"{r['replay_bytes_per_device']/1024:.1f}KiB"))
+        coll = r.get("collectives_s_per_call") or {}
+        if coll:
+            rows.append((
+                f"mesh_{dp}x{sp}_collectives",
+                min(coll.values()) * 1e6,
+                " ".join(f"{name[:-2]} {s*1e6:.0f}us"
+                         for name, s in sorted(coll.items()))))
     return rows
 
 

@@ -1,22 +1,34 @@
 """GraphRep backend benchmark: dense (B, N, N) vs sparse (B, N, D) padded
 edge lists at paper scale (§5.2 memory model, §4.1 distributed storage).
 
-Records, per representation at N ≥ 2048 (ER ρ=0.15):
+Records, per representation at N ≥ 2048 and per density regime:
 - peak per-step state bytes (adjacency/topology + C/S masks),
-- per-policy-evaluation wall time of the unified Alg. 4 step.
+- per-policy-evaluation wall time of the unified Alg. 4 step (fused
+  kernel path, DESIGN.md §12).
 
-The paper's sparse-storage claim is a MEMORY claim — O(N²ρ) COO (their
-GPUs) or O(N·maxdeg) padded lists (here) against O(N²) dense — that is what
-unlocks the >30M-edge graphs of §6.4; wall time per eval is reported so the
-compute cost of gather-vs-matmul is visible too.
+Two ER densities are swept deliberately:
+
+- ``rho=0.15`` (avg degree ~307) — the legacy point from PR 1.  This is
+  a DENSE-graph regime: the aggregation gathers ~N·0.15N·K elements, so
+  on a GEMM-optimized host the (N, N) matmul wins wall time and only
+  the O(N²) vs O(N·maxdeg) memory claim favors sparse.
+- ``rho=0.0156`` (avg degree ~32) — the paper regime.  The §6.4 graphs
+  (30M+ edges at N ≥ 1M) have average degree ~3–60, i.e. density ≤ 1e-4;
+  avg degree 32 at N=2048 is the faithful small-N proxy.  Here the
+  sparse rep must beat dense on BOTH per-eval time and memory — that is
+  the acceptance claim, guarded by a hard failure below.
+
+JSON → experiments/bench/sparse_vs_dense.json.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
+from .common import save
 
-from .common import save, timed
+# (rho, regime tag) — keep the dense-regime point committed for honesty;
+# the paper-regime point carries the acceptance claim.
+DENSITIES = ((0.15, "dense_regime"), (0.0156, "paper_regime"))
 
 
 def run(quick: bool = False):
@@ -28,35 +40,54 @@ def run(quick: bool = False):
     n = 2048                       # acceptance floor: N >= 2048
     k = 8 if quick else 16
     evals = 1 if quick else 3
-    adj = random_graph_batch("er", n, 1, seed=0, rho=0.15)
     params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=k))
 
-    results = {"n": n, "rho": 0.15, "embed_dim": k}
+    results = {"n": n, "embed_dim": k,
+               "densities": [r for r, _ in DENSITIES]}
     rows = []
-    for name in ("dense", "sparse"):
-        rep = get_rep(name)
-        state = rep.init_state(adj)
-        sb = rep.state_bytes(state)
+    for rho, regime in DENSITIES:
+        adj = random_graph_batch("er", n, 1, seed=0, rho=rho)
+        per_rho = {"regime": regime}
+        for name in ("dense", "sparse"):
+            rep = get_rep(name)
+            state = rep.init_state(adj)
+            sb = rep.state_bytes(state)
 
-        def one_eval(s):
-            s2, done, nc = _inference_step(params, s, rep=rep, num_layers=2,
-                                           use_adaptive=True)
-            jax.block_until_ready(s2.solution)
-            return s2
+            def one_eval(s):
+                s2, done, nc = _inference_step(
+                    params, s, rep=rep, problem="mvc", num_layers=2,
+                    use_adaptive=True)
+                jax.block_until_ready(s2.solution)
+                return s2
 
-        state = one_eval(state)                 # warmup/compile
-        t0 = time.perf_counter()
-        for _ in range(evals):
-            state = one_eval(state)
-        dt = (time.perf_counter() - t0) / evals
+            state = one_eval(state)             # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(evals):
+                state = one_eval(state)
+            dt = (time.perf_counter() - t0) / evals
 
-        results[name] = {"state_bytes": int(sb), "s_per_eval": dt}
-        rows.append((f"sparse_vs_dense_{name}_n{n}", dt * 1e6,
-                     f"state {sb/1e6:.2f}MB per-eval {dt*1e3:.1f}ms"))
+            per_rho[name] = {"state_bytes": int(sb), "s_per_eval": dt}
+            rows.append((f"sparse_vs_dense_{name}_n{n}_rho{rho}", dt * 1e6,
+                         f"state {sb/1e6:.2f}MB per-eval {dt*1e3:.1f}ms"))
 
-    ratio = results["dense"]["state_bytes"] / results["sparse"]["state_bytes"]
-    results["dense_over_sparse_bytes"] = ratio
-    rows.append((f"sparse_vs_dense_ratio_n{n}", 0.0,
-                 f"dense/sparse state bytes = {ratio:.2f}x"))
+        per_rho["dense_over_sparse_bytes"] = (
+            per_rho["dense"]["state_bytes"]
+            / per_rho["sparse"]["state_bytes"])
+        per_rho["dense_over_sparse_eval"] = (
+            per_rho["dense"]["s_per_eval"] / per_rho["sparse"]["s_per_eval"])
+        rows.append((
+            f"sparse_vs_dense_ratio_n{n}_rho{rho}", 0.0,
+            f"{regime}: dense/sparse bytes = "
+            f"{per_rho['dense_over_sparse_bytes']:.2f}x eval = "
+            f"{per_rho['dense_over_sparse_eval']:.2f}x"))
+        results[f"rho_{rho}"] = per_rho
+
     save("sparse_vs_dense", results)
+    paper = results["rho_0.0156"]
+    if paper["dense_over_sparse_eval"] <= 1.0:
+        # acceptance claim: at paper-regime density the sparse rep wins
+        # per-eval wall time as well as memory — fail loudly if it rots.
+        raise RuntimeError(
+            "sparse rep no faster than dense per eval at paper-regime "
+            f"density (dense/sparse = {paper['dense_over_sparse_eval']:.2f}x)")
     return rows

@@ -151,10 +151,16 @@ class GraphRepConfig:
     # 0 ⇒ single device.
     spatial: Union[int, Tuple[int, int]] = 0
     engine: str = "device"           # training engine: "device" | "host"
+    # S2V layer lowering (DESIGN.md §12): "fused" super-kernel (default) |
+    # "xla" reference chain; and matmul operand precision "f32" | "bf16".
+    kernel: str = "fused"
+    compute: str = "f32"
 
     def __post_init__(self):
         assert self.rep in ("dense", "sparse"), self.rep
         assert self.engine in ("device", "host"), self.engine
+        assert self.kernel in ("fused", "xla"), self.kernel
+        assert self.compute in ("f32", "bf16"), self.compute
 
     def make(self):
         """Construct the GraphRep backend this config describes."""
@@ -165,10 +171,12 @@ class GraphRepConfig:
 
     def apply(self, cfg):
         """Stamp this selection onto a ``PolicyConfig`` (engine, spatial,
-        rep) so agent/training construction reads one source of truth."""
+        rep, kernel, compute) so agent/training construction reads one
+        source of truth."""
         import dataclasses as _dc
         return _dc.replace(cfg, graph_rep=self.rep, engine=self.engine,
-                           spatial=self.spatial)
+                           spatial=self.spatial, kernel=self.kernel,
+                           compute=self.compute)
 
 
 GRAPH_REPS = {

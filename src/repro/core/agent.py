@@ -36,24 +36,30 @@ def candidate_mask(adj: jax.Array, solution: jax.Array) -> jax.Array:
     return ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("rep", "num_layers"))
+@functools.partial(jax.jit, static_argnames=("rep", "num_layers", "kernel",
+                                             "compute"))
 def greedy_action_state(params: PolicyParams, state, *, rep: GraphRep,
-                        num_layers: int):
+                        num_layers: int, kernel: str = "fused",
+                        compute: str = "f32"):
     """argmax_v Q(s, v) over candidates (exploit path of Alg. 1 line 10)."""
-    s = rep.scores(params, state, num_layers=num_layers)
+    s = rep.scores(params, state, num_layers=num_layers, kernel=kernel,
+                   compute=compute)
     return jnp.argmax(s, axis=-1), s
 
 
 def max_q_raw(params: PolicyParams, state, *, rep: GraphRep,
-              num_layers: int):
+              num_layers: int, kernel: str = "fused", compute: str = "f32"):
     """max_v Q(s', v) with the no-candidate convention (0) — un-jitted so
     the fused train step (``repro.core.engine``) can trace it inline."""
-    s = rep.scores(params, state, num_layers=num_layers)
+    s = rep.scores(params, state, num_layers=num_layers, kernel=kernel,
+                   compute=compute)
     has_cand = state.candidate.sum(-1) > 0
     return jnp.where(has_cand, s.max(-1), 0.0)
 
 
-max_q_state = functools.partial(jax.jit, static_argnames=("rep", "num_layers"))(max_q_raw)
+max_q_state = functools.partial(
+    jax.jit, static_argnames=("rep", "num_layers", "kernel",
+                              "compute"))(max_q_raw)
 
 
 @functools.partial(jax.jit, static_argnames=("num_layers",))
@@ -72,12 +78,14 @@ def max_q(params: PolicyParams, adj, sol, cand, *, num_layers: int):
 
 def train_minibatch_raw(params: PolicyParams, opt: AdamState, state,
                         action, target, *, rep: GraphRep, num_layers: int,
-                        lr: float):
+                        lr: float, kernel: str = "fused",
+                        compute: str = "f32"):
     """One GD iteration on a re-materialized minibatch (Alg. 5 lines 19-23).
     Un-jitted building block shared by the host path (jitted below), the
     fused train step's scan body and the spatial shard_map path."""
     def loss_fn(p):
-        s = rep.scores(p, state, num_layers=num_layers, masked=False)
+        s = rep.scores(p, state, num_layers=num_layers, masked=False,
+                       kernel=kernel, compute=compute)
         qsa = jnp.take_along_axis(s, action[:, None], axis=-1)[:, 0]
         return jnp.mean(jnp.square(qsa - target))
 
@@ -87,7 +95,7 @@ def train_minibatch_raw(params: PolicyParams, opt: AdamState, state,
 
 
 _train_minibatch = functools.partial(
-    jax.jit, static_argnames=("rep", "num_layers"),
+    jax.jit, static_argnames=("rep", "num_layers", "kernel", "compute"),
     donate_argnums=(0, 1))(train_minibatch_raw)
 
 
@@ -123,7 +131,8 @@ class Agent:
             self._spatial_fn = spatial_train_minibatch_fn(
                 mesh_from_spec(self.cfg.spatial),
                 num_layers=self.cfg.num_layers,
-                lr=self.cfg.learning_rate)
+                lr=self.cfg.learning_rate,
+                kernel=self.cfg.kernel, compute=self.cfg.compute)
         return self._spatial_fn
 
     # -- acting ------------------------------------------------------------
@@ -138,7 +147,9 @@ class Agent:
         b, n = state.candidate.shape
         greedy, _ = greedy_action_state(self.params, state,
                                         rep=rep_for_state(state),
-                                        num_layers=self.cfg.num_layers)
+                                        num_layers=self.cfg.num_layers,
+                                        kernel=self.cfg.kernel,
+                                        compute=self.cfg.compute)
         greedy = np.asarray(greedy)
         if not explore:
             return greedy
@@ -164,7 +175,9 @@ class Agent:
         if self.target_mode == "stored":
             nxt = max_q_state(self.params, next_state,
                               rep=rep_for_state(next_state),
-                              num_layers=self.cfg.num_layers)
+                              num_layers=self.cfg.num_layers,
+                              kernel=self.cfg.kernel,
+                              compute=self.cfg.compute)
             target = np.asarray(reward) + self.cfg.gamma * np.asarray(nxt) * (
                 1.0 - np.asarray(done, np.float32))
         else:
@@ -199,7 +212,9 @@ class Agent:
                                             residual=residual,
                                             candidate_fn=candidate_fn)
                 nxt = max_q_state(self.params, st2, rep=rep,
-                                  num_layers=self.cfg.num_layers)
+                                  num_layers=self.cfg.num_layers,
+                                  kernel=self.cfg.kernel,
+                                  compute=self.cfg.compute)
                 tgt = rew + self.cfg.gamma * np.asarray(nxt) * (1.0 - done)
             st = rep.state_from_tuples(source, gi, sol, residual=residual,
                                        candidate_fn=candidate_fn)
@@ -212,7 +227,8 @@ class Agent:
                     self.params, self.opt, st,
                     jnp.asarray(act), jnp.asarray(tgt),
                     rep=rep, num_layers=self.cfg.num_layers,
-                    lr=self.cfg.learning_rate)
+                    lr=self.cfg.learning_rate,
+                    kernel=self.cfg.kernel, compute=self.cfg.compute)
             loss = float(l)
         self.step_count += 1
         return loss

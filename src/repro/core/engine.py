@@ -138,16 +138,19 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
     minibatch, lr = cfg.minibatch, cfg.learning_rate
     stored = target_mode == "stored"
 
+    kernel, compute = cfg.kernel, cfg.compute
     dp, sp = normalize_spatial(cfg.spatial)
     if (dp, sp) != (1, 1):
         from .spatial import spatial_train_minibatch_fn
         mesh = make_mesh(dp, sp)
         gd_step = spatial_train_minibatch_fn(mesh, num_layers=num_layers,
-                                             lr=lr, jit=False)
+                                             lr=lr, jit=False,
+                                             kernel=kernel, compute=compute)
     else:
         mesh = None
         gd_step = functools.partial(train_minibatch_raw, rep=rep,
-                                    num_layers=num_layers, lr=lr)
+                                    num_layers=num_layers, lr=lr,
+                                    kernel=kernel, compute=compute)
 
     def _epsilon(step_count):
         frac = jnp.minimum(1.0, step_count.astype(jnp.float32)
@@ -165,7 +168,8 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
         rng, k_eps, k_pick, k_train = jax.random.split(es.rng, 4)
 
         # -- act (Alg. 1 lines 9-10) --------------------------------------
-        scores = rep.scores(es.params, state, num_layers=num_layers)
+        scores = rep.scores(es.params, state, num_layers=num_layers,
+                            kernel=kernel, compute=compute)
         action = jnp.argmax(scores, axis=-1)
         if explore:
             logits = jnp.where(state.candidate > 0.5, 0.0, NEG_INF)
@@ -180,7 +184,8 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
         # -- remember (Alg. 5 lines 11-13) --------------------------------
         if stored:
             nxt = max_q_raw(es.params, new_state, rep=rep,
-                            num_layers=num_layers)
+                            num_layers=num_layers, kernel=kernel,
+                            compute=compute)
             target = reward + gamma * nxt * (1.0 - done.astype(jnp.float32))
         else:
             target = jnp.zeros_like(reward)
@@ -205,7 +210,8 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
                                                 residual=residual,
                                                 candidate_fn=cand_fn)
                     nxt = max_q_raw(params, st2, rep=rep,
-                                    num_layers=num_layers)
+                                    num_layers=num_layers, kernel=kernel,
+                                    compute=compute)
                     tgt = rew + gamma * nxt * (1.0 - dn)
                 st = rep.state_from_tuples(source, gi, sol,
                                            residual=residual,
@@ -243,7 +249,8 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
 
 def get_solve_step(*, rep: Union[str, GraphRep, None] = None,
                    problem: str = "mvc", num_layers: int = 2,
-                   use_adaptive: bool = False, spatial: MeshSpec = 0):
+                   use_adaptive: bool = False, spatial: MeshSpec = 0,
+                   kernel: str = "fused", compute: str = "f32"):
     """Build (and cache) the fused device-resident solve for a configuration.
 
     Returns ``solve_fn(params, state, max_evals) -> (solution, evals,
@@ -261,24 +268,27 @@ def get_solve_step(*, rep: Union[str, GraphRep, None] = None,
     """
     rep = get_rep(rep)
     return _build_solve_step(rep, problem, num_layers, bool(use_adaptive),
-                             normalize_spatial(spatial))
+                             normalize_spatial(spatial), kernel, compute)
 
 
 @functools.lru_cache(maxsize=64)
 def _build_solve_step(rep: GraphRep, problem: str, num_layers: int,
-                      use_adaptive: bool, spatial: tuple):
+                      use_adaptive: bool, spatial: tuple, kernel: str,
+                      compute: str):
     dp, sp = spatial
     if (dp, sp) != (1, 1):
         from .spatial import spatial_solve_scores_fn
         mesh = make_mesh(dp, sp)
         score_fn = spatial_solve_scores_fn(
             mesh, num_layers=num_layers, rep=rep,
-            residual=env_lib.sparse_residual_flag(problem))
+            residual=env_lib.sparse_residual_flag(problem),
+            kernel=kernel, compute=compute)
     else:
         mesh = None
 
         def score_fn(params, state):
-            return rep.scores(params, state, num_layers=num_layers)
+            return rep.scores(params, state, num_layers=num_layers,
+                              kernel=kernel, compute=compute)
 
     @jax.jit
     def solve_fn(params, state, max_evals):

@@ -64,8 +64,11 @@ class GraphRep:
 
     # -- policy evaluation --------------------------------------------------
     def scores(self, params: PolicyParams, state, *, num_layers: int,
-               masked: bool = True) -> jax.Array:
-        """(B, N) candidate scores: Q(EM(state), C)."""
+               masked: bool = True, kernel: str = "fused",
+               compute: str = "f32") -> jax.Array:
+        """(B, N) candidate scores: Q(EM(state), C).  ``kernel``/``compute``
+        select the S2V layer lowering and operand precision (DESIGN.md §12).
+        """
         raise NotImplementedError
 
     # -- state transition ---------------------------------------------------
@@ -120,10 +123,10 @@ class DenseRep(GraphRep):
         return state
 
     def scores(self, params, state: GraphState, *, num_layers,
-               masked=True) -> jax.Array:
+               masked=True, kernel="fused", compute="f32") -> jax.Array:
         return policy_scores(params, state.adj, state.solution,
                              state.candidate, num_layers=num_layers,
-                             masked=masked)
+                             masked=masked, kernel=kernel, compute=compute)
 
     def commit(self, state: GraphState, sel):
         solution = jnp.maximum(state.solution, sel)
@@ -189,10 +192,11 @@ class SparseRep(GraphRep):
         return state
 
     def scores(self, params, state: SparseGraphState, *, num_layers,
-               masked=True) -> jax.Array:
+               masked=True, kernel="fused", compute="f32") -> jax.Array:
         return sparse_policy_scores(params, state, state.solution,
                                     state.candidate, num_layers=num_layers,
-                                    masked=masked, residual=state.residual)
+                                    masked=masked, residual=state.residual,
+                                    kernel=kernel, compute=compute)
 
     def commit(self, state: SparseGraphState, sel):
         solution = jnp.maximum(state.solution, sel)

@@ -93,16 +93,18 @@ def apply_selection(state, scores, candidate, use_adaptive: bool,
 
 @functools.partial(jax.jit,
                    static_argnames=("rep", "problem", "num_layers",
-                                    "use_adaptive"))
+                                    "use_adaptive", "kernel", "compute"))
 def _inference_step(params: PolicyParams, state, *, rep: GraphRep,
-                    problem: str, num_layers: int, use_adaptive: bool):
+                    problem: str, num_layers: int, use_adaptive: bool,
+                    kernel: str = "fused", compute: str = "f32"):
     """One policy evaluation + top-d commit (Alg. 4 body, vectorized over B).
 
     Identical on both representations: the backend supplies the scores,
     the env registry the selection/commit/termination rules; only the
     state layout differs.  Finished graphs (no candidates) commit nothing.
     """
-    scores = rep.scores(params, state, num_layers=num_layers)  # (B, N) masked
+    scores = rep.scores(params, state, num_layers=num_layers,
+                        kernel=kernel, compute=compute)     # (B, N) masked
     return apply_selection(state, scores, state.candidate, use_adaptive,
                            problem)
 
@@ -140,7 +142,8 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
           multi_node: bool = False, max_evals: Optional[int] = None,
           step_fn: Optional[Callable] = None,
           rep: Union[str, GraphRep] = "dense", problem: str = "mvc",
-          engine: str = "device", spatial=0) -> InferenceResult:
+          engine: str = "device", spatial=0, kernel: str = "fused",
+          compute: str = "f32") -> InferenceResult:
     """Run Alg. 4 until every graph in the batch has a complete solution.
 
     multi_node=False reproduces the original d=1 algorithm; True enables the
@@ -154,7 +157,8 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
     partitions every policy evaluation sp-way under shard_map; an int P
     back-compats to ``(1, P)`` (device engine only, DESIGN.md §10).
     ``step_fn`` may override the jitted step (host engine only; kept for
-    custom drivers).
+    custom drivers).  ``kernel``/``compute`` select the S2V layer lowering
+    and matmul operand precision (DESIGN.md §12) on both engines.
     """
     from .mesh import normalize_spatial
     if engine not in ("host", "device"):
@@ -172,7 +176,8 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
         from .engine import get_solve_step
         fused = get_solve_step(rep=rep, problem=problem,
                                num_layers=num_layers,
-                               use_adaptive=multi_node, spatial=spatial)
+                               use_adaptive=multi_node, spatial=spatial,
+                               kernel=kernel, compute=compute)
         # the solve's single host↔device round-trip: one result fetch
         sol, evals, committed = jax.device_get(
             fused(params, state, jnp.asarray(max_evals, jnp.int32)))
@@ -189,7 +194,7 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
     committed = np.zeros((state.batch,), np.int64)
     fn = step_fn or (lambda p, s: _inference_step(
         p, s, rep=rep, problem=problem, num_layers=num_layers,
-        use_adaptive=multi_node))
+        use_adaptive=multi_node, kernel=kernel, compute=compute))
     for _ in range(max_evals):
         state, done, ncommit = fn(params, state)
         evals += 1
@@ -231,9 +236,10 @@ def best_trajectory_cut(params: PolicyParams, adj0, *, num_layers: int = 2,
 def solve_with_config(params: PolicyParams, adj0, cfg: PolicyConfig, *,
                       multi_node: bool = False, problem: str = "mvc",
                       **kw) -> InferenceResult:
-    """``solve`` with rep/engine/spatial/num_layers taken from a
-    :class:`PolicyConfig` — the same config-driven selection the training
-    engine uses (DESIGN.md §8/§9)."""
+    """``solve`` with rep/engine/spatial/num_layers/kernel/compute taken
+    from a :class:`PolicyConfig` — the same config-driven selection the
+    training engine uses (DESIGN.md §8/§9)."""
     return solve(params, adj0, num_layers=cfg.num_layers,
                  rep=cfg.graph_rep, engine=cfg.engine, spatial=cfg.spatial,
+                 kernel=cfg.kernel, compute=cfg.compute,
                  multi_node=multi_node, problem=problem, **kw)

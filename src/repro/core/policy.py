@@ -10,7 +10,8 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from .s2v import S2VParams, init_s2v, embed_local
+from .s2v import (S2VParams, init_s2v, embed_local, check_kernel,
+                  compute_dtype)
 from .qmodel import QParams, init_q, scores_local
 
 
@@ -46,6 +47,17 @@ class PolicyConfig:
     # `graph`.  Back-compat: an int P means the legacy 1-D node sharding
     # (1, P); 0 → single device, no mesh.
     spatial: Union[int, Tuple[int, int]] = 0
+    # S2V layer lowering (DESIGN.md §12): "fused" = one launch per layer
+    # (Pallas super-kernel on TPU, single XLA composition elsewhere) with
+    # layer-0 elision; "xla" = the reference per-op chain.
+    kernel: str = "fused"
+    # Matmul operand precision: "f32" | "bf16" (f32 accumulation, f32
+    # residual/ReLU/Q-model, f32 master params).
+    compute: str = "f32"
+
+    def __post_init__(self):
+        check_kernel(self.kernel)
+        compute_dtype(self.compute)   # validates the mode name
 
 
 def init_policy(key: jax.Array, cfg: PolicyConfig) -> PolicyParams:
@@ -69,9 +81,11 @@ def policy_scores(
     num_layers: int,
     axis: Optional[str] = None,
     masked: bool = True,
-    mp_impl=None,
+    kernel: str = "fused",
+    compute: str = "f32",
 ) -> jax.Array:
     """Q(EM(Aᶦ, Sᶦ), Cᶦ): (B, Nl) masked scores of local candidates."""
     emb = embed_local(params.em, adj_local, sol_local,
-                      num_layers=num_layers, axis=axis, mp_impl=mp_impl)
+                      num_layers=num_layers, axis=axis, kernel=kernel,
+                      compute=compute)
     return scores_local(params.q, emb, cand_local, axis=axis, masked=masked)

@@ -14,8 +14,19 @@ This is the TPU adaptation of the paper's COO/cuSPARSE storage (DESIGN.md
 ``embed_sparse_local`` is the distributed form (paper Alg. 2 on sparse
 storage): each device holds the (B, N/P, D) neighbor-list rows of its
 resident nodes; one all-gather of the (B, K, N) embedding buffer per layer
-replaces the dense path's all-reduce.  ``gather_impl`` plugs in the Pallas
-kernel from ``repro.kernels.s2v_gather`` for the aggregation hot loop.
+replaces the dense path's all-reduce.
+
+``kernel="fused"`` (default) runs each layer as ONE fused launch —
+gather/aggregate → θ4-matmul → residual add → ReLU — via the Pallas
+super-kernel ``repro.kernels.s2v_fused.fused_s2v_layer_sparse`` on TPU and
+the equivalent single XLA composition elsewhere, and elides layer 0
+entirely (zero-initialized embeddings make the first aggregation exactly
+zero, so layer 1 is relu(embed1+embed2) — bit-identical, and one
+all-gather fewer per eval when sharded).  ``kernel="xla"`` is the
+reference per-op chain; ``gather_impl`` plugs a custom aggregation into it
+(the Pallas gather kernel from ``repro.kernels.s2v_gather`` on TPU).
+``compute="bf16"`` casts matmul operands to bf16 with f32 accumulation
+(DESIGN.md §12).
 
 The solve driver lives in ``repro.core.inference`` — use
 ``solve(..., rep="sparse")``; representation dispatch is handled by
@@ -23,6 +34,7 @@ The solve driver lives in ``repro.core.inference`` — use
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Optional
 
 import numpy as np
@@ -35,6 +47,7 @@ from .graphs import (SparseGraphBatch, SparseGraphState,
                      sparse_batch_from_dense)
 from .policy import PolicyParams
 from .qmodel import scores_local, NEG_INF
+from .s2v import check_kernel, compute_dtype
 
 __all__ = ["SparseGraphBatch", "sparse_batch_from_dense", "embed_sparse",
            "embed_sparse_local", "residual_edge_factors",
@@ -125,7 +138,7 @@ def _gather_aggregate(xp: jax.Array, nbrs: jax.Array,
 
 
 def _default_gather_impl() -> Optional[Callable]:
-    """Production default for the aggregation hot loop: the Pallas gather
+    """Aggregation hot loop of the reference "xla" chain: the Pallas gather
     kernel on TPU (VMEM-tiled, avoids materializing the (B, K, N, D)
     gather transient in HBM); pure-jnp gather elsewhere, where XLA's fused
     gather beats the interpret-mode kernel."""
@@ -135,9 +148,55 @@ def _default_gather_impl() -> Optional[Callable]:
     return None
 
 
+def _sparse_layer_jnp(theta4, x_full, nbr_local, edge_local, base, cd):
+    """One fused sparse layer as a single XLA composition: gather/aggregate
+    with cd-cast operands and f32 accumulation, θ4-matmul, residual + ReLU.
+    x_full (B, K, N) has NO sentinel column (padded ids select the zero
+    column appended here)."""
+    xp = jnp.pad(x_full, ((0, 0), (0, 0), (0, 1))).astype(cd)
+    gathered = _gather_neighbors(xp, nbr_local)             # (B, K, Nl, D)
+    nbr = jnp.einsum("bknd,bnd->bkn", gathered, edge_local.astype(cd),
+                     preferred_element_type=jnp.float32)
+    e3 = jnp.einsum("kj,bjn->bkn", theta4.astype(cd), nbr.astype(cd),
+                    preferred_element_type=jnp.float32)
+    return jax.nn.relu(base + e3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _sparse_layer_hw(theta4, x_full, nbr_local, edge_local, base, cd):
+    from ..kernels.ops import fused_s2v_layer_sparse
+    return fused_s2v_layer_sparse(theta4, x_full, nbr_local, edge_local,
+                                  base, compute_dtype=cd)
+
+
+def _sparse_layer_hw_fwd(theta4, x_full, nbr_local, edge_local, base, cd):
+    return _sparse_layer_hw(theta4, x_full, nbr_local, edge_local, base,
+                            cd), (theta4, x_full, nbr_local, edge_local, base)
+
+
+def _sparse_layer_hw_bwd(cd, res, g):
+    _, vjp = jax.vjp(
+        lambda t4, x, nb, ed, b: _sparse_layer_jnp(t4, x, nb, ed, b, cd),
+        *res)
+    return vjp(g)
+
+
+_sparse_layer_hw.defvjp(_sparse_layer_hw_fwd, _sparse_layer_hw_bwd)
+
+
+def _sparse_layer_fused(theta4, x_full, nbr_local, edge_local, base, cd):
+    """Backend dispatch for one fused sparse layer: the Pallas super-kernel
+    on TPU, the jnp composition elsewhere (same policy as the gather)."""
+    if jax.default_backend() == "tpu":
+        return _sparse_layer_hw(theta4, x_full, nbr_local, edge_local,
+                                base, cd)
+    return _sparse_layer_jnp(theta4, x_full, nbr_local, edge_local, base, cd)
+
+
 def embed_sparse_local(params, nbr_local: jax.Array, edge_local: jax.Array,
                        sol_local: jax.Array, *, num_layers: int,
                        axis: Optional[str] = None,
+                       kernel: str = "fused", compute: str = "f32",
                        gather_impl: Optional[Callable] = None) -> jax.Array:
     """structure2vec over the residual graph implied by (topology, S),
     computed for the N/P resident nodes of this device (Alg. 2 on sparse
@@ -147,7 +206,12 @@ def embed_sparse_local(params, nbr_local: jax.Array, edge_local: jax.Array,
     residual-edge factors; sol_local (B, Nl).  With ``axis`` naming a
     shard_map mesh axis, each layer all-gathers the (B, K, N) embedding
     buffer so local gathers can reach remote-resident neighbors; axis=None
-    is the single-device path (Nl == N).  Returns (B, K, Nl)."""
+    is the single-device path (Nl == N).  ``kernel``/``compute`` select the
+    fused super-kernel path and operand precision (see module docstring);
+    ``gather_impl`` only applies to the reference ``"xla"`` chain.
+    Returns (B, K, Nl)."""
+    check_kernel(kernel)
+    cd = compute_dtype(compute)
     b, nl, d = nbr_local.shape
     k = params.theta1.shape[0]
     agg = gather_impl or _default_gather_impl() or _gather_aggregate
@@ -156,9 +220,24 @@ def embed_sparse_local(params, nbr_local: jax.Array, edge_local: jax.Array,
     embed1 = params.theta1[None, :, None] * sol_local[:, None, :]
     w = jax.nn.relu(params.theta2[None, :, None] * deg[:, None, :])
     embed2 = jnp.einsum("kj,bjn->bkn", params.theta3, w)
+    base = embed1 + embed2                                  # f32 residual
 
     embed = jnp.zeros((b, k, nl), jnp.float32)
-    for _ in range(num_layers):
+    for layer in range(num_layers):
+        if kernel == "fused":
+            if layer == 0:
+                # embed⁰ = 0 ⇒ the first aggregation (and its all-gather)
+                # is exactly zero ⇒ layer 1 is relu(base), bit-identical.
+                embed = jax.nn.relu(base)
+                continue
+            if axis is not None:
+                full = lax.all_gather(embed, axis, axis=2, tiled=True)
+            else:
+                full = embed                                 # Nl == N
+            embed = _sparse_layer_fused(params.theta4, full, nbr_local,
+                                        edge_local, base, cd)
+            continue
+        # Reference "xla" per-op chain (semantics of record).
         if axis is not None:
             # distributed sparse storage: gather the full embedding buffer
             # (the sparse analogue of the dense path's MPI_All_reduce)
@@ -168,12 +247,12 @@ def embed_sparse_local(params, nbr_local: jax.Array, edge_local: jax.Array,
         xp = jnp.pad(full, ((0, 0), (0, 0), (0, 1)))         # sentinel col
         nbr = agg(xp, nbr_local, edge_local)                 # (B, K, Nl)
         embed3 = jnp.einsum("kj,bjn->bkn", params.theta4, nbr)
-        embed = jax.nn.relu(embed1 + embed2 + embed3)
+        embed = jax.nn.relu(base + embed3)
     return embed
 
 
 def embed_sparse(params, g, sol: jax.Array, *, num_layers: int,
-                 residual=True,
+                 residual=True, kernel: str = "fused", compute: str = "f32",
                  gather_impl: Optional[Callable] = None) -> jax.Array:
     """Single-device convenience wrapper: derives the edge factors for the
     env's ``residual`` mode from (topology, S) and embeds all N nodes.
@@ -184,15 +263,18 @@ def embed_sparse(params, g, sol: jax.Array, *, num_layers: int,
     edge = edge_factors(g.neighbors, g.valid, sol, residual, axis=None)
     return embed_sparse_local(params, g.neighbors, edge, sol,
                               num_layers=num_layers, axis=None,
+                              kernel=kernel, compute=compute,
                               gather_impl=gather_impl)
 
 
 def sparse_policy_scores(params: PolicyParams, g, sol: jax.Array,
                          cand: jax.Array, *, num_layers: int,
                          masked: bool = True, residual=True,
+                         kernel: str = "fused", compute: str = "f32",
                          gather_impl: Optional[Callable] = None) -> jax.Array:
     emb = embed_sparse(params.em, g, sol, num_layers=num_layers,
-                       residual=residual, gather_impl=gather_impl)
+                       residual=residual, kernel=kernel, compute=compute,
+                       gather_impl=gather_impl)
     return scores_local(params.q, emb, cand, masked=masked)
 
 

@@ -65,8 +65,8 @@ def _check_divisible(mesh, b: int, n: int, what: str) -> None:
                          f"graph-axis size {sp} of mesh {mesh_shape(mesh)}")
 
 
-def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
-                      mp_impl=None):
+def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int, *,
+                      kernel: str = "fused", compute: str = "f32"):
     """Build the mesh-partitioned scorer (dense representation).
 
     in:  adj (B, N, N), sol (B, N), cand (B, N)   [batch sharded over
@@ -88,7 +88,7 @@ def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
     def scorer(params: PolicyParams, adj_l, sol_l, cand_l):
         local = policy_scores(params, adj_l, sol_l, cand_l,
                               num_layers=num_layers, axis=AXIS,
-                              mp_impl=mp_impl)
+                              kernel=kernel, compute=compute)
         # Alg. 4 line 6: MPI_All_gather of the (B/dp, N/sp) local scores.
         gathered = lax.all_gather(local, AXIS, axis=1, tiled=True)
         return gathered
@@ -101,7 +101,8 @@ def spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
 
 
 def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
-                             gather_impl=None, *, residual=True):
+                             gather_impl=None, *, residual=True,
+                             kernel: str = "fused", compute: str = "f32"):
     """Build the mesh-partitioned scorer on distributed sparse storage.
 
     in:  neighbors (B, N, D) int32, valid (B, N, D) bool, sol (B, N),
@@ -131,6 +132,7 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
         edge_l = edge_factors(nbr_l, valid_l, sol_l, residual, axis=AXIS)
         emb_l = embed_sparse_local(params.em, nbr_l, edge_l, sol_l,
                                    num_layers=num_layers, axis=AXIS,
+                                   kernel=kernel, compute=compute,
                                    gather_impl=gather_impl)
         local = scores_local(params.q, emb_l, cand_l, axis=AXIS, masked=True)
         return lax.all_gather(local, AXIS, axis=1, tiled=True)
@@ -143,7 +145,8 @@ def sparse_spatial_scores_fn(mesh: jax.sharding.Mesh, num_layers: int,
 
 
 def spatial_solve_scores_fn(mesh: jax.sharding.Mesh, *, num_layers: int,
-                            rep, residual=True):
+                            rep, residual=True, kernel: str = "fused",
+                            compute: str = "f32"):
     """State-in, scores-out wrapper around the mesh-partitioned scorers for
     the FUSED solve loop (DESIGN.md §9): takes the solve state (batch
     sharded over ``data`` by the engine), reshards its arrays onto the
@@ -155,11 +158,13 @@ def spatial_solve_scores_fn(mesh: jax.sharding.Mesh, *, num_layers: int,
     """
     if rep.name == "sparse":
         scorer = sparse_spatial_scores_fn(mesh, num_layers,
-                                          residual=residual)
+                                          residual=residual, kernel=kernel,
+                                          compute=compute)
         return lambda params, state: scorer(params, state.neighbors,
                                             state.valid, state.solution,
                                             state.candidate)
-    scorer = spatial_scores_fn(mesh, num_layers)
+    scorer = spatial_scores_fn(mesh, num_layers, kernel=kernel,
+                               compute=compute)
     return lambda params, state: scorer(params, state.adj, state.solution,
                                         state.candidate)
 
@@ -184,6 +189,7 @@ _STAGE_OVERRIDE: Optional[str] = None
 
 def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
                                num_layers: int, lr: float, jit: bool = True,
+                               kernel: str = "fused", compute: str = "f32",
                                stage_boundary: Optional[str] = None):
     """Build the mesh-parallel GD step (paper Alg. 5's per-GPU gradient
     descent + MPI_All_reduce, generalized to the 2-D mesh; DESIGN.md
@@ -232,7 +238,8 @@ def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
             def loss_fn(p):
                 s_l = policy_scores(p, adj_l, sol_l, cand_l,
                                     num_layers=num_layers, axis=AXIS,
-                                    masked=False)
+                                    masked=False, kernel=kernel,
+                                    compute=compute)
                 return _ownership_loss(s_l, action, target, my, nl)
 
             loss_l, grads_l = jax.value_and_grad(loss_fn)(params)
@@ -256,7 +263,8 @@ def spatial_train_minibatch_fn(mesh: jax.sharding.Mesh, *,
                 edge_l = edge_factors(nbr_l, val_l, sol_l, residual,
                                       axis=AXIS)
                 emb_l = embed_sparse_local(p.em, nbr_l, edge_l, sol_l,
-                                           num_layers=num_layers, axis=AXIS)
+                                           num_layers=num_layers, axis=AXIS,
+                                           kernel=kernel, compute=compute)
                 s_l = scores_local(p.q, emb_l, cand_l, axis=AXIS,
                                    masked=False)
                 return _ownership_loss(s_l, action, target, my, nl)

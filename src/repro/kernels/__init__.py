@@ -1,9 +1,14 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-- s2v_mp:     dense structure2vec message passing (paper Alg. 2) — blocked
-  batched matmul + fused θ4/ReLU epilogue.
+- s2v_fused:  fused structure2vec LAYER super-kernels (paper Alg. 2, one
+  launch per layer): dense aggregate→θ4→residual→ReLU with a VMEM f32
+  accumulator, the sparse one-hot-gather equivalent, and the
+  aggregation-only partial used by the sharded dense path (the psum splits
+  the fusion at the collective).  All take ``compute_dtype`` (bf16 operands,
+  f32 accumulation).
 - s2v_gather: sparse (padded edge-list) structure2vec aggregation — on-chip
-  one-hot expansion + MXU matmul over the (B, N, D) neighbor lists.
+  one-hot expansion + MXU matmul over the (B, N, D) neighbor lists (the
+  aggregation step of the reference "xla" chain on TPU).
 - wkv6:   chunked RWKV-6 linear-attention recurrence.
 - swa:    sliding-window causal flash attention.
 
@@ -12,5 +17,5 @@ jit'd public entry points (interpret mode auto-detected per backend, see
 ``backend.py``).
 """
 from . import ops, ref
-from .ops import (s2v_layer, mp_aggregate, sparse_mp_aggregate, wkv6, swa,
-                  grouped_glu_ffn)
+from .ops import (fused_s2v_layer, fused_s2v_layer_sparse, mp_aggregate,
+                  sparse_mp_aggregate, wkv6, swa, grouped_glu_ffn)

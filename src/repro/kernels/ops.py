@@ -13,28 +13,48 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .backend import default_interpret as _default_interpret
-from .s2v_mp import s2v_layer as _s2v_layer, mp_aggregate as _mp_aggregate
+from .s2v_fused import (fused_s2v_layer as _fused_s2v_layer,
+                        fused_s2v_layer_sparse as _fused_s2v_layer_sparse,
+                        mp_aggregate as _mp_aggregate)
 from .s2v_gather import sparse_mp_aggregate as _sparse_mp_aggregate
 from .wkv6 import wkv6_chunked as _wkv6_chunked
 from .swa import swa_attention as _swa_attention
 from .moe_gemm import grouped_glu_ffn as _grouped_glu_ffn
 
 
-@functools.partial(jax.jit, static_argnames=("tile_n", "tile_l", "interpret"))
-def s2v_layer(theta4, embed, adj, base, *, tile_n: int = 128,
-              tile_l: int = 128, interpret: bool | None = None):
-    """Fused structure2vec layer (paper Alg. 2 lines 11+13-14, local part)."""
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_l",
+                                             "compute_dtype", "interpret"))
+def fused_s2v_layer(theta4, embed, adj, base, *, tile_n: int = 128,
+                    tile_l: int = 128, compute_dtype=jnp.float32,
+                    interpret: bool | None = None):
+    """Fused dense structure2vec layer (Alg. 2 lines 11+13-14, one launch)."""
     interpret = _default_interpret() if interpret is None else interpret
-    return _s2v_layer(theta4, embed, adj, base, tile_n=tile_n,
-                      tile_l=tile_l, interpret=interpret)
+    return _fused_s2v_layer(theta4, embed, adj, base, tile_n=tile_n,
+                            tile_l=tile_l, compute_dtype=compute_dtype,
+                            interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_n", "tile_l", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_n", "compute_dtype",
+                                             "interpret"))
+def fused_s2v_layer_sparse(theta4, x, neighbors, edge, base, *,
+                           tile_n: int = 128, compute_dtype=jnp.float32,
+                           interpret: bool | None = None):
+    """Fused sparse (padded edge-list) structure2vec layer, one launch."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused_s2v_layer_sparse(theta4, x, neighbors, edge, base,
+                                   tile_n=tile_n, compute_dtype=compute_dtype,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_l",
+                                             "compute_dtype", "interpret"))
 def mp_aggregate(embed, adj, *, tile_n: int = 128, tile_l: int = 128,
-                 interpret: bool | None = None):
+                 compute_dtype=jnp.float32, interpret: bool | None = None):
+    """Aggregation-only partial kernel for the sharded dense path (the psum
+    between aggregate and epilogue splits the fusion at the collective)."""
     interpret = _default_interpret() if interpret is None else interpret
     return _mp_aggregate(embed, adj, tile_n=tile_n, tile_l=tile_l,
-                         interpret=interpret)
+                         compute_dtype=compute_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))

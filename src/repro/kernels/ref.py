@@ -19,17 +19,12 @@ def mp_aggregate(embed: jax.Array, adj: jax.Array) -> jax.Array:
                       adj.astype(jnp.float32))
 
 
-def mp_epilogue(theta4: jax.Array, nbr: jax.Array, base: jax.Array
-                ) -> jax.Array:
-    """relu(base + θ4 @ nbr)  (Alg. 2 lines 13-14 fused)."""
-    e3 = jnp.einsum("kj,bjn->bkn", theta4.astype(jnp.float32),
-                    nbr.astype(jnp.float32))
-    return jax.nn.relu(base.astype(jnp.float32) + e3)
-
-
 def s2v_layer(theta4, embed, adj, base) -> jax.Array:
-    """One full embedding layer: relu(base + θ4 @ (embed @ adj))."""
-    return mp_epilogue(theta4, mp_aggregate(embed, adj), base)
+    """One full dense embedding layer (Alg. 2 lines 11+13-14 fused):
+    relu(base + θ4 @ (embed @ adj))."""
+    e3 = jnp.einsum("kj,bjn->bkn", theta4.astype(jnp.float32),
+                    mp_aggregate(embed, adj))
+    return jax.nn.relu(base.astype(jnp.float32) + e3)
 
 
 def sparse_mp_aggregate(x: jax.Array, neighbors: jax.Array,
@@ -42,6 +37,18 @@ def sparse_mp_aggregate(x: jax.Array, neighbors: jax.Array,
     gathered = jax.vmap(lambda xb, nb: xb[:, nb])(
         x.astype(jnp.float32), neighbors)                   # (B, K, N, D)
     return jnp.einsum("bknd,bnd->bkn", gathered, edge.astype(jnp.float32))
+
+
+def s2v_layer_sparse(theta4, x, neighbors, edge, base) -> jax.Array:
+    """One full sparse embedding layer: relu(base + θ4 @ nbr_sum) where
+    nbr_sum is the padded edge-list aggregation above.  ``x`` is (B, K, N)
+    WITHOUT a sentinel column — padded ids equal N and select the zero
+    column appended here (the fused kernel is sentinel-free by iota range
+    instead)."""
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, 0), (0, 1)))
+    nbr = sparse_mp_aggregate(xp, neighbors, edge)
+    e3 = jnp.einsum("kj,bjn->bkn", theta4.astype(jnp.float32), nbr)
+    return jax.nn.relu(base.astype(jnp.float32) + e3)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,239 @@
+"""Fused structure2vec LAYER super-kernels (paper Alg. 2, one launch/layer).
+
+The paper's per-step cost is dominated by Alg. 2's message-passing chain:
+neighbor aggregation (line 11) → θ4 projection → residual add → ReLU
+(lines 13-14).  The GPU original runs this as cuSPARSE SpMM + separate
+cuBLAS/elementwise ops; here each GraphRep backend gets ONE VMEM-tiled
+Pallas kernel per layer instead of a chain of XLA ops:
+
+- ``fused_s2v_layer``:        dense rep — blocked batched (K,Nl)×(Nl,N)
+  aggregation accumulating into a VMEM f32 scratch, with the θ4-matmul +
+  residual + ReLU epilogue emitted by the final reduction step of each
+  output tile.  The (B, K, N) neighbor-sum tensor never touches HBM.
+- ``fused_s2v_layer_sparse``: sparse rep — per node-tile on-chip one-hot
+  expansion of the (TN, D) neighbor list into a (TN, N) selection matrix
+  (see ``s2v_gather.py``), aggregation as x @ Mᵀ on the MXU, then the same
+  fused epilogue.  Sentinel-free: padded neighbor ids equal N, which
+  matches no one-hot column in [0, N), so x needs no sentinel column.
+- ``mp_aggregate``:           aggregation-only partial kernel for the
+  spatially-sharded dense path, where the cross-device psum (Alg. 2
+  line 12) must run between aggregation and epilogue and therefore splits
+  the fusion at the collective boundary.
+
+Mixed precision: ``compute_dtype`` casts the matmul OPERANDS (embeddings,
+adjacency/edge factors, θ4); every accumulation is f32 via
+``preferred_element_type`` and the residual add + ReLU epilogue stays f32.
+Params remain f32 masters — casts happen at use (DESIGN.md §12).
+
+Tile sizes default to MXU-aligned (128) and are clamped for small problems.
+``interpret=None`` auto-detects the backend (compiled on TPU, interpret
+elsewhere; override with REPRO_PALLAS_INTERPRET — see ``backend.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
+
+
+def _fused_dense_kernel(t4_ref, e_ref, a_ref, base_ref, o_ref, acc):
+    """Grid (B, N/TN, Nl/TL), reduction axis l innermost (sequential).
+
+    e (1,K,TL) @ a (1,TL,TN) accumulates into the f32 VMEM scratch; the
+    last l step applies the fused epilogue relu(base + θ4 @ acc) so the
+    neighbor-sum tile never round-trips through HBM."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        e_ref[0], a_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _epilogue():
+        nbr = acc[...].astype(t4_ref.dtype)        # one rounding, f32 acc
+        e3 = jax.lax.dot_general(t4_ref[...], nbr, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        o_ref[0] = jnp.maximum(base_ref[0] + e3, 0.0)
+
+
+def fused_s2v_layer(theta4: jax.Array, embed: jax.Array, adj: jax.Array,
+                    base: jax.Array, *, tile_n: int = 128, tile_l: int = 128,
+                    compute_dtype=jnp.float32,
+                    interpret: bool | None = None) -> jax.Array:
+    """One full dense embedding layer in a single kernel launch:
+    relu(base + θ4 @ (embed @ adj)), matching ``ref.s2v_layer``.
+
+    embed (B, K, Nl), adj (B, Nl, N), base (B, K, N) — no collective; the
+    sharded path uses :func:`mp_aggregate` and fuses only up to the psum.
+    """
+    interpret = resolve_interpret(interpret)
+    cd = jnp.dtype(compute_dtype)
+    b, k, nl = embed.shape
+    _, _, n = adj.shape
+    tn = min(tile_n, n)
+    tl = min(tile_l, nl)
+    # pad to tile multiples (padding rows/cols are zero → no effect on sums;
+    # padded base columns are zero → relu(0 + θ4 @ 0) = 0, sliced off below)
+    pn, pl_ = (-n) % tn, (-nl) % tl
+    if pn or pl_:
+        embed = jnp.pad(embed, ((0, 0), (0, 0), (0, pl_)))
+        adj = jnp.pad(adj, ((0, 0), (0, pl_), (0, pn)))
+        base = jnp.pad(base, ((0, 0), (0, 0), (0, pn)))
+    npad, nlpad = n + pn, nl + pl_
+
+    out = pl.pallas_call(
+        _fused_dense_kernel,
+        grid=(b, npad // tn, nlpad // tl),
+        in_specs=[
+            pl.BlockSpec((k, k), lambda bi, ni, li: (0, 0)),
+            pl.BlockSpec((1, k, tl), lambda bi, ni, li: (bi, 0, li)),
+            pl.BlockSpec((1, tl, tn), lambda bi, ni, li: (bi, li, ni)),
+            pl.BlockSpec((1, k, tn), lambda bi, ni, li: (bi, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, k, tn), lambda bi, ni, li: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, k, npad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((k, tn), jnp.float32)],
+        interpret=interpret,
+    )(theta4.astype(cd), embed.astype(cd), adj.astype(cd),
+      base.astype(jnp.float32))
+    return out[:, :, :n]
+
+
+def _agg_kernel(e_ref, a_ref, o_ref, acc):
+    """Grid (B, N/TN, Nl/TL). e (1,K,TL) @ a (1,TL,TN) accumulated over l."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        e_ref[0], a_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = acc[...]
+
+
+def mp_aggregate(embed: jax.Array, adj: jax.Array, *, tile_n: int = 128,
+                 tile_l: int = 128, compute_dtype=jnp.float32,
+                 interpret: bool | None = None) -> jax.Array:
+    """nbr[b,k,n] = Σ_l embed[b,k,l]·adj[b,l,n] with VMEM-blocked tiles.
+
+    Aggregation-only partial of :func:`fused_s2v_layer` for the sharded
+    dense path: the f32 partial sums feed the cross-device psum, keeping
+    cross-mesh numerics identical to the single-device fused layer."""
+    interpret = resolve_interpret(interpret)
+    cd = jnp.dtype(compute_dtype)
+    b, k, nl = embed.shape
+    _, _, n = adj.shape
+    tn = min(tile_n, n)
+    tl = min(tile_l, nl)
+    # pad to tile multiples (padding rows/cols are zero → no effect on sums)
+    pn, pl_ = (-n) % tn, (-nl) % tl
+    if pn or pl_:
+        embed = jnp.pad(embed, ((0, 0), (0, 0), (0, pl_)))
+        adj = jnp.pad(adj, ((0, 0), (0, pl_), (0, pn)))
+    npad, nlpad = n + pn, nl + pl_
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(b, npad // tn, nlpad // tl),
+        in_specs=[
+            pl.BlockSpec((1, k, tl), lambda bi, ni, li: (bi, 0, li)),
+            pl.BlockSpec((1, tl, tn), lambda bi, ni, li: (bi, li, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, k, tn), lambda bi, ni, li: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, k, npad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((k, tn), jnp.float32)],
+        interpret=interpret,
+    )(embed.astype(cd), adj.astype(cd))
+    return out[:, :, :n]
+
+
+def _fused_sparse_kernel(t4_ref, nbr_ref, edge_ref, x_ref, base_ref, o_ref,
+                         m_scratch):
+    """Grid (B, N/TN).  Blocks: nbr/edge (1, TN, D), x (1, K, N) [full,
+    sentinel-free], base (1, K, TN), out (1, K, TN); m_scratch (TN, N) VMEM.
+
+    Builds the tile's selection matrix M[i,j] = Σ_d edge[i,d]·[nbr[i,d]=j]
+    on-chip (padded ids equal N → match no column), aggregates as x @ Mᵀ on
+    the MXU, then applies the fused θ4 + residual + ReLU epilogue."""
+    nbr = nbr_ref[0]                                        # (TN, D) int32
+    w = edge_ref[0]                                         # (TN, D) cd
+    tn, dmax = nbr.shape
+    nf = m_scratch.shape[1]
+    cd = m_scratch.dtype
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tn, nf), 1)
+
+    def body(d, m):
+        onehot = (cols == nbr[:, d][:, None]).astype(cd)
+        return m + w[:, d][:, None] * onehot
+
+    m_scratch[...] = jax.lax.fori_loop(
+        0, dmax, body, jnp.zeros((tn, nf), cd))
+    # nbrsum[k, i] = Σ_j x[k, j] · M[i, j] — MXU contraction over j
+    nbrsum = jax.lax.dot_general(
+        x_ref[0], m_scratch[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (K, TN) f32
+    e3 = jax.lax.dot_general(
+        t4_ref[...], nbrsum.astype(cd), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.maximum(base_ref[0] + e3, 0.0)
+
+
+def fused_s2v_layer_sparse(theta4: jax.Array, x: jax.Array,
+                           neighbors: jax.Array, edge: jax.Array,
+                           base: jax.Array, *, tile_n: int = 128,
+                           compute_dtype=jnp.float32,
+                           interpret: bool | None = None) -> jax.Array:
+    """One full sparse embedding layer in a single kernel launch, matching
+    ``ref.s2v_layer_sparse``.
+
+    x:         (B, K, N) float — embeddings, NO sentinel column (padded
+               neighbor ids equal N and match no one-hot column).
+    neighbors: (B, Nl, D) int32 — padded neighbor ids (sentinel N).
+    edge:      (B, Nl, D) float — residual-edge factors (0 for padding).
+    base:      (B, K, Nl) float — embed1 + embed2 residual term.
+    Returns (B, K, Nl) float32.
+    """
+    interpret = resolve_interpret(interpret)
+    cd = jnp.dtype(compute_dtype)
+    b, k, n = x.shape
+    _, nl, d = neighbors.shape
+    tn = min(tile_n, nl)
+    pad = (-nl) % tn
+    if pad:
+        # padding nodes point at the sentinel id N with zero edge weight and
+        # zero base → their fused output is relu(0) = 0, sliced off below
+        neighbors = jnp.pad(neighbors, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=n)
+        edge = jnp.pad(edge, ((0, 0), (0, pad), (0, 0)))
+        base = jnp.pad(base, ((0, 0), (0, 0), (0, pad)))
+    nlpad = nl + pad
+
+    out = pl.pallas_call(
+        _fused_sparse_kernel,
+        grid=(b, nlpad // tn),
+        in_specs=[
+            pl.BlockSpec((k, k), lambda bi, ni: (0, 0)),
+            pl.BlockSpec((1, tn, d), lambda bi, ni: (bi, ni, 0)),
+            pl.BlockSpec((1, tn, d), lambda bi, ni: (bi, ni, 0)),
+            pl.BlockSpec((1, k, n), lambda bi, ni: (bi, 0, 0)),
+            pl.BlockSpec((1, k, tn), lambda bi, ni: (bi, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, k, tn), lambda bi, ni: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, k, nlpad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tn, n), cd)],
+        interpret=interpret,
+    )(theta4.astype(cd), neighbors.astype(jnp.int32), edge.astype(cd),
+      x.astype(cd), base.astype(jnp.float32))
+    return out[:, :, :nl]

@@ -13,9 +13,11 @@ of TN nodes it accumulates a (TN, N+1) selection matrix M with
 M[i, j] = Σ_d edge[i, d]·[neighbors[i, d] = j], then emits the tile output
 as x @ Mᵀ on the MXU.  The selection matrix never leaves VMEM and HBM
 traffic stays O(N·maxdeg + K·N) — the sparse representation's win — while
-the arithmetic runs on MXU tiles like the dense kernel in ``s2v_mp.py``.
+the arithmetic runs on MXU tiles like the dense kernels in ``s2v_fused.py``.
 
-θ4-projection + ReLU reuse ``s2v_mp.mp_epilogue``.
+This standalone aggregation serves the reference "xla" chain on TPU; the
+production path fuses the same one-hot trick with the θ4 + residual + ReLU
+epilogue in ``s2v_fused.fused_s2v_layer_sparse``.
 """
 from __future__ import annotations
 

@@ -161,14 +161,16 @@ class GraphSolverService:
         sparse backend, by the pinned neighbor-list width), so a hit never
         retraces."""
         key = (nb, problem, self.rep.name, self.multi_node,
-               self.cfg.num_layers, self.mesh_shape)
+               self.cfg.num_layers, self.mesh_shape,
+               self.cfg.kernel, self.cfg.compute)
         fn = self._compiled.get(key)
         if fn is None:
             self.stats.compiles += 1
             fn = self._get_solve_step(
                 rep=self._bucket_rep(nb), problem=problem,
                 num_layers=self.cfg.num_layers,
-                use_adaptive=self.multi_node, spatial=self.mesh_shape)
+                use_adaptive=self.multi_node, spatial=self.mesh_shape,
+                kernel=self.cfg.kernel, compute=self.cfg.compute)
             self._compiled[key] = fn
         else:
             self.stats.cache_hits += 1

@@ -34,23 +34,24 @@ def test_mp_aggregate_matches_ref(b, k, nl, n, dtype):
 
 @pytest.mark.parametrize("b,k,nl", [(1, 8, 24), (2, 16, 40), (2, 32, 96)])
 @pytest.mark.parametrize("tile", [8, 16, 128])
-def test_s2v_layer_matches_ref(b, k, nl, tile):
+def test_fused_s2v_layer_matches_ref(b, k, nl, tile):
     embed = _rand((b, k, nl), np.float32)
     adj = (RNG.random((b, nl, nl)) < 0.3).astype(np.float32)
     base = _rand((b, k, nl), np.float32)
     t4 = _rand((k, k), np.float32) * 0.2
-    out = ops.s2v_layer(t4, embed, adj, base, tile_n=tile, tile_l=tile)
+    out = ops.fused_s2v_layer(t4, embed, adj, base, tile_n=tile, tile_l=tile)
     want = ref.s2v_layer(t4, embed, adj, base)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 
 
-def test_s2v_layer_output_nonnegative():
+def test_fused_s2v_layer_output_nonnegative():
     embed = _rand((1, 8, 16), np.float32)
     adj = (RNG.random((1, 16, 16)) < 0.3).astype(np.float32)
     base = _rand((1, 8, 16), np.float32)
     t4 = _rand((8, 8), np.float32)
-    out = np.asarray(ops.s2v_layer(t4, embed, adj, base, tile_n=8, tile_l=8))
+    out = np.asarray(ops.fused_s2v_layer(t4, embed, adj, base,
+                                         tile_n=8, tile_l=8))
     assert (out >= 0).all()
 
 
@@ -191,27 +192,20 @@ def test_swa_bf16():
 
 # ------------------------------------------------- kernel-in-system --------
 
-def test_s2v_kernel_plugs_into_policy():
-    """core.s2v accepts the fused kernel as mp_impl and matches pure jnp."""
-    import functools
+def test_fused_kernel_path_plugs_into_policy():
+    """policy_scores(kernel="fused") — the config-selected super-kernel
+    path — matches the reference "xla" chain on the dense rep."""
     from repro.core import (PolicyConfig, init_policy, init_state,
                             policy_scores, random_graph_batch)
     adj = random_graph_batch("er", 32, 2, seed=0, rho=0.25)
     params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=16))
     st = init_state(jnp.asarray(adj))
     want = policy_scores(params, st.adj, st.solution, st.candidate,
-                         num_layers=2)
-    mp = lambda t4, nbr, base: ops.s2v_layer(
-        t4, jnp.zeros_like(base), jnp.zeros_like(st.adj),
-        base + jnp.einsum("kj,bjn->bkn", t4, nbr))
-    # direct fused path: relu(base + t4@nbr) via kernel epilogue
-    from repro.kernels.s2v_mp import mp_epilogue
-    mp2 = lambda t4, nbr, base: mp_epilogue(t4, nbr, base, tile_n=16,
-                                            interpret=True)
+                         num_layers=2, kernel="xla")
     got = policy_scores(params, st.adj, st.solution, st.candidate,
-                        num_layers=2, mp_impl=mp2)
+                        num_layers=2, kernel="fused")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+                               rtol=1e-5, atol=1e-5)
 
 
 # ------------------------------------------------------- moe grouped -------
