@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
   Fig 8  gd_iterations        Fig 9/10/11  scaling
   §5     efficiency_model     kernels  kernel_bench
   §5.2   sparse_vs_dense (GraphRep backend memory/latency)
+  §13    csr_scale (CSR paper-scale BA sweep + end-to-end solve)
   §8/§9  train_step_scaling / inference_step_scaling (fused engines)
   §10    mesh_scaling (2-D (data, graph) mesh: time + per-device bytes)
   §11    problem_suite (per-env quality vs greedy + per-eval time)
@@ -27,7 +28,8 @@ def main() -> None:
 
     from . import (learning_speed, multinode_selection, gd_iterations,
                    scaling, efficiency_model, kernel_bench,
-                   roofline_summary, sparse_vs_dense, train_step_scaling,
+                   roofline_summary, sparse_vs_dense, csr_scale,
+                   train_step_scaling,
                    inference_step_scaling, mesh_scaling, problem_suite)
     modules = {
         "learning_speed": learning_speed,
@@ -38,6 +40,7 @@ def main() -> None:
         "kernel_bench": kernel_bench,
         "roofline_summary": roofline_summary,
         "sparse_vs_dense": sparse_vs_dense,
+        "csr_scale": csr_scale,
         "train_step_scaling": train_step_scaling,
         "inference_step_scaling": inference_step_scaling,
         "mesh_scaling": mesh_scaling,

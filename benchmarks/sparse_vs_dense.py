@@ -1,34 +1,39 @@
 """GraphRep backend benchmark: dense (B, N, N) vs sparse (B, N, D) padded
-edge lists at paper scale (§5.2 memory model, §4.1 distributed storage).
+edge lists vs flat CSR edge arrays at paper scale (§5.2 memory model,
+§4.1 distributed storage, DESIGN.md §13).
 
-Records, per representation at N ≥ 2048 and per density regime:
+Records, per representation and per density regime:
 - peak per-step state bytes (adjacency/topology + C/S masks),
 - per-policy-evaluation wall time of the unified Alg. 4 step (fused
   kernel path, DESIGN.md §12).
 
 Two ER densities are swept deliberately:
 
-- ``rho=0.15`` (avg degree ~307) — the legacy point from PR 1.  This is
-  a DENSE-graph regime: the aggregation gathers ~N·0.15N·K elements, so
-  on a GEMM-optimized host the (N, N) matmul wins wall time and only
-  the O(N²) vs O(N·maxdeg) memory claim favors sparse.
-- ``rho=0.0156`` (avg degree ~32) — the paper regime.  The §6.4 graphs
-  (30M+ edges at N ≥ 1M) have average degree ~3–60, i.e. density ≤ 1e-4;
-  avg degree 32 at N=2048 is the faithful small-N proxy.  Here the
-  sparse rep must beat dense on BOTH per-eval time and memory — that is
-  the acceptance claim, guarded by a hard failure below.
+- ``rho=0.15`` (avg degree ~0.15·N) — the legacy point from PR 1.  This
+  is a DENSE-graph regime: the aggregation gathers ~N·0.15N·K elements,
+  so on a GEMM-optimized host the (N, N) matmul wins wall time and only
+  the O(N²) vs O(E) memory claim favors the edge reps.
+- ``rho=0.0156`` (avg degree ~0.0156·N) — the paper regime.  The §6.4
+  graphs (30M+ edges at N ≥ 1M) have average degree ~3–60, i.e. density
+  ≤ 1e-4; avg degree ~N/64 is the faithful small-N proxy.  Here the edge
+  reps must beat dense on per-eval time and memory, and csr must beat
+  the PADDED sparse rep on state bytes (padding a skewed degree
+  distribution to max degree is exactly what CSR removes) — both claims
+  are guarded by hard failures below.
 
 JSON → experiments/bench/sparse_vs_dense.json.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 from .common import save
 
 # (rho, regime tag) — keep the dense-regime point committed for honesty;
-# the paper-regime point carries the acceptance claim.
+# the paper-regime point carries the acceptance claims.
 DENSITIES = ((0.15, "dense_regime"), (0.0156, "paper_regime"))
+REPS = ("dense", "sparse", "csr")
 
 
 def run(quick: bool = False):
@@ -37,7 +42,7 @@ def run(quick: bool = False):
                             random_graph_batch)
     from repro.core.inference import _inference_step
 
-    n = 2048                       # acceptance floor: N >= 2048
+    n = 512 if quick else 2048         # full run: acceptance floor N >= 2048
     k = 8 if quick else 16
     evals = 1 if quick else 3
     params = init_policy(jax.random.key(0), PolicyConfig(embed_dim=k))
@@ -48,7 +53,7 @@ def run(quick: bool = False):
     for rho, regime in DENSITIES:
         adj = random_graph_batch("er", n, 1, seed=0, rho=rho)
         per_rho = {"regime": regime}
-        for name in ("dense", "sparse"):
+        for name in REPS:
             rep = get_rep(name)
             state = rep.init_state(adj)
             sb = rep.state_bytes(state)
@@ -75,11 +80,14 @@ def run(quick: bool = False):
             / per_rho["sparse"]["state_bytes"])
         per_rho["dense_over_sparse_eval"] = (
             per_rho["dense"]["s_per_eval"] / per_rho["sparse"]["s_per_eval"])
+        per_rho["sparse_over_csr_bytes"] = (
+            per_rho["sparse"]["state_bytes"] / per_rho["csr"]["state_bytes"])
         rows.append((
             f"sparse_vs_dense_ratio_n{n}_rho{rho}", 0.0,
             f"{regime}: dense/sparse bytes = "
             f"{per_rho['dense_over_sparse_bytes']:.2f}x eval = "
-            f"{per_rho['dense_over_sparse_eval']:.2f}x"))
+            f"{per_rho['dense_over_sparse_eval']:.2f}x "
+            f"sparse/csr bytes = {per_rho['sparse_over_csr_bytes']:.2f}x"))
         results[f"rho_{rho}"] = per_rho
 
     save("sparse_vs_dense", results)
@@ -90,4 +98,25 @@ def run(quick: bool = False):
         raise RuntimeError(
             "sparse rep no faster than dense per eval at paper-regime "
             f"density (dense/sparse = {paper['dense_over_sparse_eval']:.2f}x)")
+    if paper["sparse_over_csr_bytes"] < 1.0:
+        # acceptance claim (DESIGN.md §13): at equal N and paper-regime
+        # density, flat CSR storage must not exceed the max-degree-padded
+        # sparse rep — ER degree skew alone guarantees headroom.
+        raise RuntimeError(
+            "csr rep uses more state bytes than padded sparse at "
+            "paper-regime density (sparse/csr = "
+            f"{paper['sparse_over_csr_bytes']:.2f}x)")
     return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=args.quick):
+        print(f'{name},{us:.1f},"{derived}"', flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,7 @@ def main():
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--sizes", default="12,20,28",
                     help="node counts the request stream mixes")
-    ap.add_argument("--rep", choices=["dense", "sparse"], default="dense")
+    ap.add_argument("--rep", choices=["dense", "sparse", "csr"], default="dense")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--ckpt-dir", default=None,
                     help="default: a temporary directory")

@@ -37,7 +37,7 @@ def main():
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--embed-dim", type=int, default=32)
-    ap.add_argument("--rep", choices=["dense", "sparse"], default="dense",
+    ap.add_argument("--rep", choices=["dense", "sparse", "csr"], default="dense",
                     help="GraphRep backend (DESIGN.md §1): sparse stores "
                          "O(N·maxdeg) padded edge lists instead of O(N²)")
     ap.add_argument("--engine", choices=["device", "host"], default="device",

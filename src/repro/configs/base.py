@@ -145,7 +145,9 @@ class GraphRepConfig:
     the P-way spatial sharding of the GD loss/grad (paper Alg. 5).
     """
     rep: str = "dense"               # "dense" (B,N,N) | "sparse" (B,N,D)
+                                     # | "csr" flat edge arrays (§13)
     max_degree: int = 0              # sparse: 0 → derive from the graph batch
+    max_edges: int = 0               # csr: 0 → derive from the graph batch
     # 2-D (data, graph) mesh spec (DESIGN.md §10): (dp, sp) tuple shards
     # batches over `data` and node rows over `graph`; legacy int P ⇒ (1, P);
     # 0 ⇒ single device.
@@ -157,16 +159,18 @@ class GraphRepConfig:
     compute: str = "f32"
 
     def __post_init__(self):
-        assert self.rep in ("dense", "sparse"), self.rep
+        assert self.rep in ("dense", "sparse", "csr"), self.rep
         assert self.engine in ("device", "host"), self.engine
         assert self.kernel in ("fused", "xla"), self.kernel
         assert self.compute in ("f32", "bf16"), self.compute
 
     def make(self):
         """Construct the GraphRep backend this config describes."""
-        from ..core.graphrep import DENSE, SparseRep
+        from ..core.graphrep import DENSE, CsrRep, SparseRep
         if self.rep == "dense":
             return DENSE
+        if self.rep == "csr":
+            return CsrRep(max_edges=self.max_edges or None)
         return SparseRep(max_degree=self.max_degree or None)
 
     def apply(self, cfg):
@@ -182,6 +186,7 @@ class GraphRepConfig:
 GRAPH_REPS = {
     "dense": GraphRepConfig(rep="dense"),
     "sparse": GraphRepConfig(rep="sparse"),
+    "csr": GraphRepConfig(rep="csr"),
 }
 
 

@@ -5,20 +5,29 @@ evaluation (Alg. 3), parallel inference (Alg. 4), parallel training (Alg. 5),
 compressed replay (§4.4), adaptive multi-node selection + τ GD iterations
 (§4.5), analytic models (§5).  Graph storage is pluggable (DESIGN.md §1):
 every layer dispatches through a GraphRep backend — dense (B, N, N)
-adjacency or distributed sparse (B, N, D) padded neighbor lists.
+adjacency, distributed sparse (B, N, D) padded neighbor lists, or flat
+CSR edge arrays for paper-scale graphs (DESIGN.md §13).
 """
 from .graphs import (GraphState, SparseGraphState, SparseGraphBatch,
-                     init_state, sparse_init_state, residual_adjacency,
+                     CsrGraphState, CsrGraphBatch,
+                     init_state, sparse_init_state, csr_init_state,
+                     residual_adjacency,
                      residual_edge_mask, closed_neighborhood_keep,
-                     sparse_batch_from_dense,
+                     sparse_batch_from_dense, csr_batch_from_dense,
+                     csr_batch_from_arrays, csr_from_edges,
+                     barabasi_albert_edges, cached_ba_csr,
                      erdos_renyi, barabasi_albert, social_like,
                      random_graph_batch)
-from .graphrep import (GraphRep, DenseRep, SparseRep, DENSE, SPARSE,
+from .graphrep import (GraphRep, DenseRep, SparseRep, CsrRep,
+                       DENSE, SPARSE, CSR,
                        get_rep, rep_names, rep_for_state)
 from .policy import PolicyConfig, PolicyParams, init_policy, policy_scores
 from .s2v import S2VParams, init_s2v, embed_local, embed_full
 from .s2v_sparse import (embed_sparse, embed_sparse_local, edge_factors,
                          sparse_policy_scores, sparse_state_bytes)
+from .s2v_csr import (embed_csr, embed_csr_local, csr_edge_factors,
+                      csr_policy_scores, csr_state_bytes)
+from .sampling import NeighborSampler, SampledSubgraph
 from .qmodel import QParams, init_q, scores_local
 from .agent import Agent, candidate_mask
 from .replay import (ReplayBuffer, DeviceReplay, device_replay_init,
@@ -34,7 +43,8 @@ from .mesh import (DATA, GRAPH, make_mesh, mesh_from_spec, mesh_shape,
                    normalize_spatial, is_multi, parse_spatial,
                    shard_state, constrain_batch,
                    shard_replay, constrain_replay,
-                   per_device_bytes, sparse_per_device_bytes)
+                   per_device_bytes, sparse_per_device_bytes,
+                   csr_per_device_bytes)
 from .spatial import (make_graph_mesh, spatial_scores_fn,
                       sparse_spatial_scores_fn, spatial_solve_scores_fn,
                       spatial_train_minibatch_fn,

@@ -22,8 +22,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .graphs import GraphState, SparseGraphBatch
-from .graphrep import DENSE, SPARSE, GraphRep, get_rep, rep_for_state
+from .graphs import CsrGraphBatch, GraphState, SparseGraphBatch
+from .graphrep import CSR, DENSE, SPARSE, GraphRep, get_rep, rep_for_state
 from .mesh import is_multi
 from .policy import PolicyConfig, PolicyParams, init_policy, policy_scores
 from .qmodel import NEG_INF
@@ -192,14 +192,17 @@ class Agent:
               residual=True, candidate_fn=None) -> float:
         """τ gradient-descent iterations on sampled minibatches (§4.5.2).
 
-        ``source`` is the training-graph dataset in either representation:
-        a (G, N, N) dense adjacency stack, or a ``SparseGraphBatch`` of
-        (G, N, D) neighbor lists (from ``SparseRep.prepare_dataset``).
+        ``source`` is the training-graph dataset in any representation:
+        a (G, N, N) dense adjacency stack, a ``SparseGraphBatch`` of
+        (G, N, D) neighbor lists (from ``SparseRep.prepare_dataset``), or
+        a ``CsrGraphBatch`` of flat edge arrays — e.g. sampled training
+        subgraphs from ``sampling.NeighborSampler.training_batch``.
         ``residual`` carries the env's topology mode and ``candidate_fn``
         its candidate derivation (see ``env.register``) so replay states
         are re-materialized on the graph the policy acts on.
         """
-        rep = SPARSE if isinstance(source, SparseGraphBatch) else DENSE
+        rep = (CSR if isinstance(source, CsrGraphBatch)
+               else SPARSE if isinstance(source, SparseGraphBatch) else DENSE)
         tau = self.cfg.grad_iters if tau is None else tau
         if self.replay.size < self.cfg.minibatch:
             return float("nan")

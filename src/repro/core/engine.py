@@ -100,6 +100,21 @@ def sync_to_agent(agent, es: EngineState) -> None:
     agent.step_count = int(es.step_count)
 
 
+def _check_csr_spatial(rep: GraphRep, sp: int) -> None:
+    """CSR has no spatial (graph-axis) sharding path yet: its flat edge
+    arrays are row-RAGGED, so an N/sp node split gives unequal per-device
+    edge counts — unlike the dense row blocks / padded neighbor-list rows
+    shard_map slices.  Fail fast with the supported alternatives instead of
+    silently falling back (ISSUE 7)."""
+    if rep.name == "csr" and sp > 1:
+        raise ValueError(
+            f"rep='csr' does not support spatial (graph-axis) sharding "
+            f"sp={sp}: CSR rows are ragged, so node-partitioned shard_map "
+            f"blocks would carry unequal edge counts. Use spatial=(dp, 1) "
+            f"for data parallelism with csr, or rep='sparse'/'dense' for "
+            f"sp>1 graph partitioning.")
+
+
 def get_train_step(cfg: PolicyConfig, *,
                    rep: Union[str, GraphRep, None] = None,
                    problem: str = "mvc", tau: Optional[int] = None,
@@ -141,11 +156,20 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
     kernel, compute = cfg.kernel, cfg.compute
     dp, sp = normalize_spatial(cfg.spatial)
     if (dp, sp) != (1, 1):
-        from .spatial import spatial_train_minibatch_fn
+        _check_csr_spatial(rep, sp)
         mesh = make_mesh(dp, sp)
-        gd_step = spatial_train_minibatch_fn(mesh, num_layers=num_layers,
-                                             lr=lr, jit=False,
-                                             kernel=kernel, compute=compute)
+        if rep.name == "csr":
+            # data-parallel only (sp == 1 guaranteed above): the plain
+            # minibatch step runs under GSPMD with the batch constrained
+            # over `data` — no shard_map retiling of ragged edge rows.
+            gd_step = functools.partial(train_minibatch_raw, rep=rep,
+                                        num_layers=num_layers, lr=lr,
+                                        kernel=kernel, compute=compute)
+        else:
+            from .spatial import spatial_train_minibatch_fn
+            gd_step = spatial_train_minibatch_fn(
+                mesh, num_layers=num_layers, lr=lr, jit=False,
+                kernel=kernel, compute=compute)
     else:
         mesh = None
         gd_step = functools.partial(train_minibatch_raw, rep=rep,
@@ -250,7 +274,8 @@ def _build_train_step(cfg: PolicyConfig, rep: GraphRep, problem: str,
 def get_solve_step(*, rep: Union[str, GraphRep, None] = None,
                    problem: str = "mvc", num_layers: int = 2,
                    use_adaptive: bool = False, spatial: MeshSpec = 0,
-                   kernel: str = "fused", compute: str = "f32"):
+                   kernel: str = "fused", compute: str = "f32",
+                   max_d: int = 8):
     """Build (and cache) the fused device-resident solve for a configuration.
 
     Returns ``solve_fn(params, state, max_evals) -> (solution, evals,
@@ -264,25 +289,35 @@ def get_solve_step(*, rep: Union[str, GraphRep, None] = None,
     sp-way under shard_map (dense row blocks / sparse neighbor-list rows;
     same per-eval collectives as the 1-D spatial path, DESIGN.md §3),
     with the top-d commit running data-parallel in the paper's Fig. 4
-    lockstep.
+    lockstep.  ``max_d`` widens the adaptive top-d cap beyond the paper's
+    8 for paper-scale solves (see ``inference.solve``).
     """
     rep = get_rep(rep)
     return _build_solve_step(rep, problem, num_layers, bool(use_adaptive),
-                             normalize_spatial(spatial), kernel, compute)
+                             normalize_spatial(spatial), kernel, compute,
+                             int(max_d))
 
 
 @functools.lru_cache(maxsize=64)
 def _build_solve_step(rep: GraphRep, problem: str, num_layers: int,
                       use_adaptive: bool, spatial: tuple, kernel: str,
-                      compute: str):
+                      compute: str, max_d: int):
     dp, sp = spatial
     if (dp, sp) != (1, 1):
-        from .spatial import spatial_solve_scores_fn
+        _check_csr_spatial(rep, sp)
         mesh = make_mesh(dp, sp)
-        score_fn = spatial_solve_scores_fn(
-            mesh, num_layers=num_layers, rep=rep,
-            residual=env_lib.sparse_residual_flag(problem),
-            kernel=kernel, compute=compute)
+        if rep.name == "csr":
+            # data-parallel only (sp == 1 guaranteed above): plain scoring
+            # under GSPMD with the batch constrained over `data`.
+            def score_fn(params, state):
+                return rep.scores(params, state, num_layers=num_layers,
+                                  kernel=kernel, compute=compute)
+        else:
+            from .spatial import spatial_solve_scores_fn
+            score_fn = spatial_solve_scores_fn(
+                mesh, num_layers=num_layers, rep=rep,
+                residual=env_lib.sparse_residual_flag(problem),
+                kernel=kernel, compute=compute)
     else:
         mesh = None
 
@@ -310,7 +345,8 @@ def _build_solve_step(rep: GraphRep, problem: str, num_layers: int,
             # env-polymorphic select → prune → commit, shared verbatim
             # with the host-loop step (bit-identical engines)
             new_state, done, ncommit = apply_selection(
-                state, scores, state.candidate, use_adaptive, problem)
+                state, scores, state.candidate, use_adaptive, problem,
+                max_d)
             return (new_state, evals + 1, committed + ncommit, done)
 
         init = (state, jnp.int32(0), jnp.zeros((b,), jnp.int32),

@@ -53,9 +53,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .graphs import (GraphState, SparseGraphState, closed_neighborhood_keep,
-                     closed_neighborhood_keep_dense, init_state,
-                     residual_edge_mask)
+from .graphs import (CsrGraphState, GraphState, SparseGraphState,
+                     closed_neighborhood_keep, closed_neighborhood_keep_dense,
+                     csr_closed_neighborhood_keep, csr_residual_edge_mask,
+                     csr_row_ids, csr_segment_max, csr_segment_sum,
+                     init_state, residual_edge_mask)
 from .qmodel import NEG_INF
 
 EnvStep = Callable[[GraphState, jax.Array], Tuple[GraphState, jax.Array, jax.Array]]
@@ -113,13 +115,8 @@ def assignment_commit(state, sel: jax.Array):
     solution = jnp.maximum(state.solution, sel)
     candidate = jnp.clip(state.candidate - sel, 0.0, 1.0)
     done = candidate.sum(-1) == 0
-    if isinstance(state, SparseGraphState):
-        new = SparseGraphState(neighbors=state.neighbors, valid=state.valid,
-                               candidate=candidate, solution=solution,
-                               residual=state.residual)
-    else:
-        new = GraphState(adj=state.adj, candidate=candidate,
-                         solution=solution)
+    # only the C/S masks change — identical across all three representations
+    new = dataclasses.replace(state, candidate=candidate, solution=solution)
     return new, done
 
 
@@ -251,16 +248,16 @@ def _probe_padding_safety(name: str) -> bool:
     graph containing isolated padding-style nodes, and report whether any
     degree-0 node ever becomes a candidate.  Candidate rules and env
     steps are representation-polymorphic with separate code per backend,
-    so BOTH the dense and the sparse path are probed (the service builds
-    SparseRep states when ``cfg.graph_rep='sparse'``)."""
-    from .graphrep import DENSE, SPARSE
+    so ALL THREE backend paths are probed (the service builds SparseRep /
+    CsrRep states when ``cfg.graph_rep`` selects them)."""
+    from .graphrep import CSR, DENSE, SPARSE
     # probe: nodes 0-1 share the only edge; nodes 2 and 3 are isolated —
     # exactly the shape pad_adjacency produces.
     adj = np.zeros((1, 4, 4), np.float32)
     adj[0, 0, 1] = adj[0, 1, 0] = 1.0
     mode, cand_fn = _MODE[name], _CANDIDATES[name]
     gi = np.zeros((1,), np.int32)
-    for rep in (DENSE, SPARSE):
+    for rep in (DENSE, SPARSE, CSR):
         source = rep.prepare_dataset(adj)
         for sol in ([0, 0, 0, 0], [1, 0, 0, 0], [1, 1, 0, 0]):
             st = rep.state_from_tuples(
@@ -331,16 +328,33 @@ def _mvc_step_sparse(state: SparseGraphState, action: jax.Array):
                             candidate=candidate, solution=solution), reward, done
 
 
+def _mvc_step_csr(state: CsrGraphState, action: jax.Array):
+    b, n = state.candidate.shape
+    oh = _onehot(action, n)
+    solution = jnp.maximum(state.solution, oh)
+    rid = csr_row_ids(state.indptr, state.indices.shape[1])
+    edge = csr_residual_edge_mask(state.indices, state.edge_mask, rid,
+                                  solution)
+    deg = csr_segment_sum(edge, rid, n)
+    candidate = ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
+    reward = -jnp.ones((b,), jnp.float32)
+    done = edge.sum(-1) == 0
+    return dataclasses.replace(state, candidate=candidate,
+                               solution=solution), reward, done
+
+
 @register("mvc", checker=lambda adj0, sol: is_cover(adj0, sol))
 def mvc_step(state, action: jax.Array):
     """Minimum Vertex Cover step (paper §4, Fig 3/4).
 
     action: (B,) int32 node ids.  Adds the node to the partial solution,
     removes it from candidates, and removes its incident edges from the
-    residual graph (dense: zeroes its row+column; sparse: the residual edge
-    mask drops them).  Reward is -1 per selected node (minimize |S|); done
-    when no edges remain.
+    residual graph (dense: zeroes its row+column; sparse/csr: the residual
+    edge mask drops them).  Reward is -1 per selected node (minimize |S|);
+    done when no edges remain.
     """
+    if isinstance(state, CsrGraphState):
+        return _mvc_step_csr(state, action)
     if isinstance(state, SparseGraphState):
         return _mvc_step_sparse(state, action)
     return _mvc_step_dense(state, action)
@@ -384,6 +398,30 @@ def _maxcut_step_sparse(state: SparseGraphState, action: jax.Array):
                             residual=False), reward, done
 
 
+def _maxcut_step_csr(state: CsrGraphState, action: jax.Array):
+    b, n = state.candidate.shape
+    oh = _onehot(action, n)
+    in_s = state.solution
+    # CSR rows are ragged, so the action's incident edges are found with a
+    # fixed-shape row-match mask over all E edge slots instead of a
+    # per-node neighbor-row gather.
+    rid = csr_row_ids(state.indptr, state.indices.shape[1])
+    rm = ((rid == action.astype(jnp.int32)[:, None]) & state.edge_mask
+          ).astype(jnp.float32)                              # (B, E)
+    in_s_pad = jnp.pad(in_s, ((0, 0), (0, 1)))               # sentinel slot
+    s_col = jax.vmap(lambda sb, ib: sb[ib])(in_s_pad, state.indices)
+    to_s = (rm * s_col).sum(-1)
+    to_out = (rm * (1.0 - s_col)).sum(-1)
+    reward = to_out - to_s
+    solution = jnp.maximum(in_s, oh)
+    candidate = jnp.clip(state.candidate - oh, 0.0, 1.0)
+    done = candidate.sum(-1) == 0
+    # MaxCut keeps the original topology visible to the policy — mark the
+    # state non-residual (same convention as the sparse step).
+    return dataclasses.replace(state, candidate=candidate, solution=solution,
+                               residual=False), reward, done
+
+
 @register("maxcut", residual=False, sense="max")
 def maxcut_step(state, action: jax.Array):
     """Maximum Cut step (second environment, demonstrating extensibility —
@@ -395,6 +433,8 @@ def maxcut_step(state, action: jax.Array):
     gain — approximated here as "all nodes assigned" for fixed-horizon RL;
     the agent's reward signal handles quality.
     """
+    if isinstance(state, CsrGraphState):
+        return _maxcut_step_csr(state, action)
     if isinstance(state, SparseGraphState):
         return _maxcut_step_sparse(state, action)
     return _maxcut_step_dense(state, action)
@@ -414,6 +454,14 @@ def mis_commit(state, sel: jax.Array):
     neighbors leave the candidate pool (and, densely, the topology); done
     when no eligible node remains."""
     solution = jnp.maximum(state.solution, sel)
+    if isinstance(state, CsrGraphState):
+        rid = csr_row_ids(state.indptr, state.indices.shape[1])
+        keep = csr_closed_neighborhood_keep(state.indices, state.edge_mask,
+                                            rid, sel)
+        candidate = state.candidate * keep
+        done = candidate.sum(-1) == 0
+        return dataclasses.replace(state, candidate=candidate,
+                                   solution=solution), done
     if isinstance(state, SparseGraphState):
         keep = closed_neighborhood_keep(state.neighbors, state.valid, sel)
         candidate = state.candidate * keep
@@ -438,7 +486,19 @@ def mis_prune(state, sel: jax.Array, scores: jax.Array) -> jax.Array:
     node adjacent to an already-kept one.
     """
     b, n = sel.shape
-    sparse = isinstance(state, SparseGraphState)
+    if isinstance(state, CsrGraphState):
+        rid = csr_row_ids(state.indptr, state.indices.shape[1])
+
+        def keep_fn(pick):
+            return csr_closed_neighborhood_keep(state.indices,
+                                                state.edge_mask, rid, pick)
+    elif isinstance(state, SparseGraphState):
+        def keep_fn(pick):
+            return closed_neighborhood_keep(state.neighbors, state.valid,
+                                            pick)
+    else:
+        def keep_fn(pick):
+            return closed_neighborhood_keep_dense(state.adj, pick)
 
     def body(carry, _):
         kept, active = carry
@@ -446,11 +506,7 @@ def mis_prune(state, sel: jax.Array, scores: jax.Array) -> jax.Array:
         idx = jnp.argmax(masked, axis=-1)
         has = (active.sum(-1) > 0).astype(jnp.float32)
         pick = _onehot(idx, n) * has[:, None]
-        if sparse:
-            keep = closed_neighborhood_keep(state.neighbors, state.valid,
-                                            pick)
-        else:
-            keep = closed_neighborhood_keep_dense(state.adj, pick)
+        keep = keep_fn(pick)
         return (jnp.maximum(kept, pick), active * keep), None
 
     (kept, _), _ = lax.scan(body, (jnp.zeros_like(sel), sel), None,
@@ -491,7 +547,14 @@ def _covered_and_need(state):
     """(covered, need): closed-neighborhood coverage of S and the mask of
     nodes that require domination (positive original degree)."""
     sol = state.solution
-    if isinstance(state, SparseGraphState):
+    if isinstance(state, CsrGraphState):
+        rid = csr_row_ids(state.indptr, state.indices.shape[1])
+        em = state.edge_mask.astype(jnp.float32)
+        deg0 = csr_segment_sum(em, rid, sol.shape[1])
+        sol_pad = jnp.pad(sol, ((0, 0), (0, 1)))            # sentinel slot
+        s_col = jax.vmap(lambda sb, ib: sb[ib])(sol_pad, state.indices)
+        cov_nbr = csr_segment_max(em * s_col, rid, sol.shape[1])
+    elif isinstance(state, SparseGraphState):
         val = state.valid.astype(jnp.float32)
         deg0 = val.sum(-1)
         sol_pad = jnp.pad(sol, ((0, 0), (0, 1)))            # sentinel slot
@@ -512,7 +575,13 @@ def mds_candidates(state) -> jax.Array:
     the contract :func:`ensure_padding_safe` verifies."""
     covered, need = _covered_and_need(state)
     uncov = (need & (covered < 0.5)).astype(jnp.float32)
-    if isinstance(state, SparseGraphState):
+    if isinstance(state, CsrGraphState):
+        rid = csr_row_ids(state.indptr, state.indices.shape[1])
+        em = state.edge_mask.astype(jnp.float32)
+        u_pad = jnp.pad(uncov, ((0, 0), (0, 1)))
+        u_col = jax.vmap(lambda ub, ib: ub[ib])(u_pad, state.indices)
+        gain = uncov + csr_segment_sum(em * u_col, rid, uncov.shape[1])
+    elif isinstance(state, SparseGraphState):
         val = state.valid.astype(jnp.float32)
         u_pad = jnp.pad(uncov, ((0, 0), (0, 1)))
         u_nbr = jax.vmap(lambda ub, nb: ub[nb])(u_pad, state.neighbors)

@@ -11,9 +11,12 @@ paths:
 - ``DenseRep``  — (B, N, N) residual adjacency, rewritten per commit.
 - ``SparseRep`` — (B, N, D) padded neighbor lists + masks; topology is
   immutable, residual edges derived from the solution mask.
+- ``CsrRep``    — flat (indptr, indices, edge_mask) CSR arrays; the first
+  EDGE-proportional backend (no N² block, no per-node max-degree padding)
+  — the rep that reaches the paper's 10M+-edge graphs (DESIGN.md §13).
 
-Backends are singletons (``get_rep("dense"|"sparse")``) so they can be
-passed to ``jax.jit`` as static arguments.
+Backends are singletons (``get_rep("dense"|"sparse"|"csr")``) so they can
+be passed to ``jax.jit`` as static arguments.
 """
 from __future__ import annotations
 
@@ -24,11 +27,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .graphs import (GraphState, SparseGraphBatch, SparseGraphState,
+from .graphs import (CsrGraphBatch, CsrGraphState, GraphState,
+                     SparseGraphBatch, SparseGraphState,
                      closed_neighborhood_keep, closed_neighborhood_keep_dense,
-                     init_state, residual_adjacency, residual_edge_mask,
-                     sparse_batch_from_dense, sparse_init_state)
+                     csr_batch_from_dense, csr_closed_neighborhood_keep,
+                     csr_init_state, csr_residual_edge_mask, csr_row_ids,
+                     csr_segment_sum, init_state, residual_adjacency,
+                     residual_edge_mask, sparse_batch_from_dense,
+                     sparse_init_state)
 from .policy import PolicyParams, policy_scores
+from .s2v_csr import csr_policy_scores, csr_state_bytes
 from .s2v_sparse import sparse_policy_scores
 
 
@@ -213,10 +221,96 @@ class SparseRep(GraphRep):
                    + state.candidate.size * 4 + state.solution.size * 4)
 
 
+class CsrRep(GraphRep):
+    """Flat (indptr, indices, edge_mask) CSR arrays — O(E) state, immutable
+    topology, residual edges derived from the solution mask (DESIGN.md
+    §13).  ``max_edges`` pins the padded edge capacity (serving buckets);
+    None derives it per batch."""
+
+    name = "csr"
+
+    def __init__(self, max_edges: Optional[int] = None):
+        self.max_edges = max_edges
+
+    def init_state(self, adj) -> CsrGraphState:
+        if isinstance(adj, CsrGraphState):
+            return adj
+        if isinstance(adj, CsrGraphBatch):
+            return csr_init_state(adj)
+        g = csr_batch_from_dense(np.asarray(adj), self.max_edges)
+        return csr_init_state(g)
+
+    def prepare_dataset(self, adj_stack) -> CsrGraphBatch:
+        return csr_batch_from_dense(np.asarray(adj_stack), self.max_edges)
+
+    def state_from_tuples(self, source: CsrGraphBatch, graph_idx,
+                          solutions, residual=True, candidate_fn=None
+                          ) -> CsrGraphState:
+        from .env import normalize_residual_mode
+        mode = normalize_residual_mode(residual)
+        sol = jnp.asarray(solutions, jnp.float32)
+        gi = jnp.asarray(graph_idx)
+        indptr = source.indptr[gi]
+        indices = source.indices[gi]
+        mask = source.edge_mask[gi]
+        rid = csr_row_ids(indptr, indices.shape[1])
+        if mode == "solution":
+            deg = _csr_degree(indices, mask, rid, sol, "solution",
+                              sol.shape[1])
+            cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
+            flag = True
+        elif mode == "none":
+            deg = _csr_degree(indices, mask, rid, sol, "none", sol.shape[1])
+            cand = ((deg > 0) & (sol < 0.5)).astype(jnp.float32)
+            flag = False
+        else:                                # closed: drop S and N(S)
+            keep = csr_closed_neighborhood_keep(indices, mask, rid, sol)
+            deg0 = _csr_degree(indices, mask, rid, sol, "none", sol.shape[1])
+            cand = ((deg0 > 0) & (keep > 0.5)).astype(jnp.float32)
+            flag = mode
+        state = CsrGraphState(indptr=indptr, indices=indices, edge_mask=mask,
+                              candidate=cand, solution=sol, residual=flag)
+        if candidate_fn is not None:
+            state = dataclasses.replace(state,
+                                        candidate=candidate_fn(state))
+        return state
+
+    def scores(self, params, state: CsrGraphState, *, num_layers,
+               masked=True, kernel="fused", compute="f32") -> jax.Array:
+        return csr_policy_scores(params, state, state.solution,
+                                 state.candidate, num_layers=num_layers,
+                                 masked=masked, residual=state.residual,
+                                 kernel=kernel, compute=compute)
+
+    def commit(self, state: CsrGraphState, sel):
+        solution = jnp.maximum(state.solution, sel)
+        rid = csr_row_ids(state.indptr, state.indices.shape[1])
+        edge = csr_residual_edge_mask(state.indices, state.edge_mask, rid,
+                                      solution)
+        deg = csr_segment_sum(edge, rid, state.num_nodes)
+        candidate = ((deg > 0) & (solution < 0.5)).astype(jnp.float32)
+        done = edge.sum(-1) == 0
+        return dataclasses.replace(state, candidate=candidate,
+                                   solution=solution), done
+
+    def state_bytes(self, state: CsrGraphState) -> int:
+        return int(csr_state_bytes(state))
+
+
+def _csr_degree(indices, mask, rid, sol, mode, n):
+    """(B, N) per-node degree under the given residual mode."""
+    if mode == "solution":
+        edge = csr_residual_edge_mask(indices, mask, rid, sol)
+    else:
+        edge = mask.astype(jnp.float32)
+    return csr_segment_sum(edge, rid, n)
+
+
 DENSE = DenseRep()
 SPARSE = SparseRep()
+CSR = CsrRep()
 
-_REPS: Dict[str, GraphRep] = {"dense": DENSE, "sparse": SPARSE}
+_REPS: Dict[str, GraphRep] = {"dense": DENSE, "sparse": SPARSE, "csr": CSR}
 
 
 def get_rep(rep: Union[str, GraphRep, None]) -> GraphRep:
@@ -238,4 +332,6 @@ def rep_names():
 
 def rep_for_state(state) -> GraphRep:
     """Dispatch on a state's type (environment/agent polymorphism)."""
+    if isinstance(state, CsrGraphState):
+        return CSR
     return SPARSE if isinstance(state, SparseGraphState) else DENSE

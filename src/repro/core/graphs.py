@@ -11,11 +11,18 @@ the stack dispatches (DESIGN.md §1):
   masks — the paper's distributed sparse storage (§5.2) made TPU-gatherable.
   The topology is NEVER rewritten; residual edges are derived from the
   partial-solution mask via :func:`residual_edge_mask`.
+- csr ``CsrGraphState``: flat CSR arrays ``(indptr, indices, edge_mask)``
+  (DESIGN.md §13) — edge-proportional storage with NO per-node padding, so
+  one hub node no longer costs hub-degree padding on every row.  Like the
+  sparse rep the topology is immutable; residual edges derive from S via
+  :func:`csr_residual_edge_mask`.  This is the rep that reaches the
+  paper's N ≥ 1M / 10M+-edge graphs (§6.4).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import pathlib
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -308,6 +315,311 @@ def sparse_init_state(g: SparseGraphBatch) -> SparseGraphState:
         candidate=(deg > 0).astype(jnp.float32),
         solution=jnp.zeros(g.neighbors.shape[:2], jnp.float32),
     )
+
+
+# ---------------------------------------------------------------------------
+# CSR graph state: flat compressed-sparse-row arrays (DESIGN.md §13).
+# The first representation whose storage is EDGE-proportional — no (N, N)
+# dense block and no per-node max-degree padding, so a power-law hub costs
+# only its own edges.  Topology (indptr, indices, edge_mask) is immutable;
+# residual edges derive from the solution mask exactly like the sparse rep.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CsrGraphBatch:
+    """Static CSR topology for B graphs with a common (N, E) shape.
+
+    indptr:    (B, N+1) int32 — row j's directed edges live in
+               ``indices[indptr[j]:indptr[j+1]]``; ``indptr[N]`` is the
+               graph's true directed edge count (≤ E).
+    indices:   (B, E) int32 column ids, padded with the sentinel N past the
+               true edge count (embeddings pad a zero column, so sentinel
+               gathers are inert — same convention as ``SparseGraphBatch``).
+    edge_mask: (B, E) bool — True on real edges, False on padding.
+
+    Graphs are undirected: every edge appears twice (u→v and v→u), matching
+    the dense adjacency's symmetry.  Registered as a pytree so the fused
+    train step can take it as its dataset operand.
+    """
+    indptr: jax.Array
+    indices: jax.Array
+    edge_mask: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.indptr.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.indptr.shape[1] - 1
+
+    @property
+    def num_edges(self) -> int:
+        return self.indices.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CsrGraphState:
+    """CSR counterpart of :class:`GraphState` / :class:`SparseGraphState`.
+
+    Topology fields as in :class:`CsrGraphBatch`; (candidate, solution) are
+    the paper's evolving C/S masks.  ``residual`` (static) records the env's
+    topology mode exactly as on ``SparseGraphState``: ``True``/"solution",
+    ``False``/"none", or "closed" (MIS).  Row ids are NOT stored — they are
+    re-derived in-jit from ``indptr`` (:func:`csr_row_ids`), keeping state
+    bytes at 5·E + ~12·N per graph.
+    """
+    indptr: jax.Array
+    indices: jax.Array
+    edge_mask: jax.Array
+    candidate: jax.Array
+    solution: jax.Array
+    residual: bool = dataclasses.field(default=True,
+                                       metadata=dict(static=True))
+
+    @property
+    def batch(self) -> int:
+        return self.indptr.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.indptr.shape[1] - 1
+
+    @property
+    def num_edges(self) -> int:
+        return self.indices.shape[1]
+
+
+def csr_row_ids(indptr: jax.Array, num_edges: int) -> jax.Array:
+    """(B, N+1) indptr → (B, E) int32 source-row id per edge slot, in-jit.
+
+    ``row_ids[j] = #{i ∈ 1..N-1 : indptr[i] ≤ j}`` — an inclusive cumsum of
+    +1 increments scattered at the interior row boundaries.  Consecutive
+    empty rows stack their increments at one slot (``.add`` accumulates);
+    boundaries at E (empty tail rows) are out of bounds and dropped
+    (``mode="drop"``); padded edge slots land on the last row, where
+    ``edge_mask`` zeroes their contributions.
+    """
+    def one(iptr):
+        inc = jnp.zeros((num_edges,), jnp.int32).at[iptr[1:-1]].add(
+            1, mode="drop")
+        return jnp.cumsum(inc)
+    return jax.vmap(one)(indptr)
+
+
+def csr_segment_sum(values: jax.Array, row_ids: jax.Array,
+                    num_nodes: int) -> jax.Array:
+    """Per-row scatter-add: (B, E) edge values → (B, N) node sums."""
+    def one(vb, rb):
+        return jnp.zeros((num_nodes,), vb.dtype).at[rb].add(vb)
+    return jax.vmap(one)(values, row_ids)
+
+
+def csr_segment_max(values: jax.Array, row_ids: jax.Array,
+                    num_nodes: int) -> jax.Array:
+    """Per-row scatter-max of NON-NEGATIVE edge values (init is zero, so
+    rows with no edges — and masked-out padding — read 0)."""
+    def one(vb, rb):
+        return jnp.zeros((num_nodes,), vb.dtype).at[rb].max(vb)
+    return jax.vmap(one)(values, row_ids)
+
+
+def csr_residual_edge_mask(indices: jax.Array, edge_mask: jax.Array,
+                           row_ids: jax.Array,
+                           solution: jax.Array) -> jax.Array:
+    """(B, E) float residual-edge factors: mask ∧ keep[row] ∧ keep[col] —
+    the CSR analogue of :func:`residual_edge_mask` (and of the dense
+    :func:`residual_adjacency` rewrite, derived instead of stored)."""
+    keep = 1.0 - solution
+    keep_pad = jnp.pad(keep, ((0, 0), (0, 1)))              # sentinel slot
+    keep_col = jax.vmap(lambda kb, ib: kb[ib])(keep_pad, indices)
+    keep_row = jax.vmap(lambda kb, rb: kb[rb])(keep, row_ids)
+    return edge_mask.astype(jnp.float32) * keep_col * keep_row
+
+
+def csr_closed_neighborhood_keep(indices: jax.Array, edge_mask: jax.Array,
+                                 row_ids: jax.Array,
+                                 solution: jax.Array) -> jax.Array:
+    """(B, N) keep factors for CLOSED-neighborhood removal (MIS): a node
+    survives iff neither in ``solution`` nor adjacent to it.  Segment-max
+    of sol[col] over each row plays the role of the sparse rep's masked
+    ``max(-1)``."""
+    sol_pad = jnp.pad(solution, ((0, 0), (0, 1)))           # sentinel slot
+    s_col = jax.vmap(lambda sb, ib: sb[ib])(sol_pad, indices)
+    any_nbr = csr_segment_max(edge_mask.astype(jnp.float32) * s_col,
+                              row_ids, solution.shape[1])
+    return (1.0 - solution) * (1.0 - any_nbr)
+
+
+def csr_batch_from_dense(adj: np.ndarray,
+                         max_edges: Optional[int] = None) -> CsrGraphBatch:
+    """adj (B, N, N) → flat CSR arrays with a common edge capacity
+    (vectorized: one ``np.nonzero`` + cumcounts, no per-node loop).
+
+    ``max_edges`` of None or 0 derives the capacity from the batch; an
+    explicit value below the true max directed-edge count raises rather
+    than silently dropping edges (same contract as
+    :func:`sparse_batch_from_dense`)."""
+    adj = np.asarray(adj)
+    if adj.ndim == 2:
+        adj = adj[None]
+    b, n, _ = adj.shape
+    bi, rows, cols = np.nonzero(adj > 0)        # C-order: sorted by (bi, row)
+    per_graph = np.bincount(bi, minlength=b)
+    true_e = int(per_graph.max(initial=0))
+    if not max_edges:                           # None or 0 → derive
+        me = max(true_e, 1)
+    elif max_edges < true_e:
+        raise ValueError(
+            f"max_edges={max_edges} is below the batch's true directed edge "
+            f"count {true_e}; refusing to silently drop edges")
+    else:
+        me = max_edges
+    indices = np.full((b, me), n, np.int32)
+    mask = np.zeros((b, me), bool)
+    starts = np.concatenate([[0], np.cumsum(per_graph)[:-1]])
+    pos = np.arange(len(bi)) - starts[bi]
+    indices[bi, pos] = cols
+    mask[bi, pos] = True
+    rowcounts = np.bincount(bi * n + rows, minlength=b * n).reshape(b, n)
+    indptr = np.zeros((b, n + 1), np.int32)
+    np.cumsum(rowcounts, axis=1, out=indptr[:, 1:])
+    return CsrGraphBatch(indptr=jnp.asarray(indptr),
+                         indices=jnp.asarray(indices),
+                         edge_mask=jnp.asarray(mask))
+
+
+def csr_batch_from_arrays(indptr: np.ndarray, indices: np.ndarray,
+                          max_edges: Optional[int] = None) -> CsrGraphBatch:
+    """Single resident graph (indptr (N+1,), indices (E,)) → a B=1
+    :class:`CsrGraphBatch`, optionally padded to ``max_edges`` slots.
+    This is the zero-copy on-ramp from :func:`cached_ba_csr` output to the
+    solver — no dense adjacency is ever materialized."""
+    indptr = np.asarray(indptr, np.int32)
+    indices = np.asarray(indices, np.int32)
+    n = len(indptr) - 1
+    e = len(indices)
+    me = max_edges if max_edges else max(e, 1)
+    if me < e:
+        raise ValueError(
+            f"max_edges={me} is below the graph's directed edge count {e}; "
+            f"refusing to silently drop edges")
+    idx = np.full((me,), n, np.int32)
+    idx[:e] = indices
+    mask = np.zeros((me,), bool)
+    mask[:e] = True
+    return CsrGraphBatch(indptr=jnp.asarray(indptr)[None],
+                         indices=jnp.asarray(idx)[None],
+                         edge_mask=jnp.asarray(mask)[None])
+
+
+def csr_batch_to_dense(g: CsrGraphBatch) -> np.ndarray:
+    """(B, N, N) dense adjacency from a CSR batch — parity-test helper."""
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    mask = np.asarray(g.edge_mask)
+    b, n = indptr.shape[0], indptr.shape[1] - 1
+    a = np.zeros((b, n, n), np.float32)
+    for i in range(b):
+        rows = np.repeat(np.arange(n), np.diff(indptr[i]))
+        cols = indices[i][mask[i]]
+        a[i, rows, cols] = 1.0
+    return a
+
+
+def csr_init_state(g: CsrGraphBatch) -> CsrGraphState:
+    """Fresh CSR state: empty solution; candidates = degree > 0."""
+    deg = g.indptr[:, 1:] - g.indptr[:, :-1]
+    return CsrGraphState(
+        indptr=g.indptr, indices=g.indices, edge_mask=g.edge_mask,
+        candidate=(deg > 0).astype(jnp.float32),
+        solution=jnp.zeros((g.batch, g.num_nodes), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming edge-list generation + CSR assembly for paper-scale graphs
+# (§6.4: N ≥ 1M, 10M+ edges).  Everything below is vectorized numpy — no
+# dense (N, N) array and no Python per-node loop ever exists.
+# ---------------------------------------------------------------------------
+
+def barabasi_albert_edges(n: int, d: int = 4, *,
+                          seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """BA(n, d) as a directed edge list (src, dst) — O(E) memory and time.
+
+    Vectorized Batagelj–Brandes copy model: edge t's target is a uniform
+    draw r[t] from the 2t endpoints of earlier edges.  Even draws resolve
+    to a known source (``src[r/2]``); odd draws point at another edge's
+    *target* and are resolved by pointer-chasing ``rr ← r[(rr-1)/2]``
+    (strictly decreasing, so the chase terminates).  Uniform-over-endpoints
+    IS degree-proportional sampling — the same trick as the dense
+    :func:`barabasi_albert`, without its per-node loop.  Repeated draws
+    within one node's d attachments collapse at dedupe time, so realized
+    degree can be slightly below d (standard for this model).
+    """
+    rng = np.random.default_rng(seed)
+    m = np.minimum(np.arange(n, dtype=np.int64), d)
+    src = np.repeat(np.arange(n, dtype=np.int64), m)
+    t = np.arange(len(src), dtype=np.int64)
+    if len(t) == 0:
+        return src, src.copy()
+    r = rng.integers(0, np.maximum(2 * t, 1))
+    rr = r.copy()
+    odd = (rr & 1) == 1
+    while odd.any():
+        rr[odd] = r[(rr[odd] - 1) >> 1]
+        odd = (rr & 1) == 1
+    dst = src[rr >> 1]
+    dst[0] = 0                         # edge 0 has no predecessors: 1 → 0
+    return src, dst
+
+
+def csr_from_edges(n: int, src: np.ndarray, dst: np.ndarray, *,
+                   symmetrize: bool = True,
+                   dedupe: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    """Directed edge list → (indptr (N+1,) int32, indices (E,) int32) CSR,
+    fully vectorized.  Self-loops are dropped; ``symmetrize`` mirrors every
+    edge (undirected convention); ``dedupe`` removes repeats via a sort on
+    the int64 key ``src·n + dst`` (which also yields CSR row-major order).
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    if symmetrize:
+        src, dst = (np.concatenate([src, dst]), np.concatenate([dst, src]))
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src * np.int64(n) + dst
+    if dedupe:
+        key = np.unique(key)
+        src, dst = key // n, key % n
+    else:
+        order = np.argsort(key, kind="stable")
+        src, dst = src[order], dst[order]
+    deg = np.bincount(src, minlength=n)
+    indptr = np.zeros((n + 1,), np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    return indptr.astype(np.int32), dst.astype(np.int32)
+
+
+_DATA_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "data"
+
+
+def cached_ba_csr(n: int, d: int = 4, *, seed: int,
+                  cache_dir=None) -> Tuple[np.ndarray, np.ndarray]:
+    """BA(n, d) as CSR arrays, cached as ``.npz`` under experiments/data/
+    so the 10M-edge scaling bench doesn't regenerate the graph per run."""
+    cache = pathlib.Path(cache_dir) if cache_dir else _DATA_DIR
+    cache.mkdir(parents=True, exist_ok=True)
+    path = cache / f"ba_n{n}_d{d}_s{seed}.npz"
+    if path.exists():
+        with np.load(path) as z:
+            return z["indptr"], z["indices"]
+    src, dst = barabasi_albert_edges(n, d, seed=seed)
+    indptr, indices = csr_from_edges(n, src, dst)
+    np.savez_compressed(path, indptr=indptr, indices=indices)
+    return indptr, indices
 
 
 # ---------------------------------------------------------------------------

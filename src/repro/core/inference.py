@@ -2,19 +2,22 @@
 (paper §4.5.1), representation- and environment-polymorphic.
 
 ``solve`` drives a batch of B graphs to complete solutions using the
-(pre)trained policy, on EITHER the dense (B, N, N) adjacency path or the
-sparse (B, N, D) padded neighbor-list path (``rep="dense"|"sparse"``, see
-DESIGN.md §1), for ANY registered environment (``problem="mvc"|"maxcut"|
+(pre)trained policy, on ANY GraphRep backend — the dense (B, N, N)
+adjacency path, the sparse (B, N, D) padded neighbor-list path, or the
+flat CSR edge-array path (``rep="dense"|"sparse"|"csr"``, see DESIGN.md
+§1/§13) — for ANY registered environment (``problem="mvc"|"maxcut"|
 "mis"|"mds"`` — the selection/commit/termination rules come from the env
 registry, DESIGN.md §9/§11).
 Each iteration is one policy evaluation; with the adaptive schedule, up to
-d ∈ {8,4,2,1} top-scoring candidates are committed per evaluation, with d
-shrinking as the candidate set shrinks:
+d ∈ {max_d, max_d/2, max_d/4, max_d/8} top-scoring candidates are
+committed per evaluation, with d shrinking as the candidate set shrinks
+(``max_d`` defaults to the paper's 8; paper-scale solves on million-node
+graphs raise it so a solve stays tens of evaluations, §4.5.1):
 
-    |C| >  N/2        -> d = 8
-    |C| in (N/4, N/2] -> d = 4
-    |C| in (N/8, N/4] -> d = 2
-    |C| <= N/8        -> d = 1
+    |C| >  N/2        -> d = max_d
+    |C| in (N/4, N/2] -> d = max_d/2
+    |C| in (N/8, N/4] -> d = max_d/4
+    |C| <= N/8        -> d = max_d/8  (each tier floored at 1)
 
 Two execution engines, selected like the training engine (DESIGN.md §8/§9):
 
@@ -38,7 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from . import env as env_lib
-from .graphs import SparseGraphState
+from .graphs import CsrGraphState, SparseGraphState
 from .graphrep import GraphRep, get_rep
 from .policy import PolicyConfig, PolicyParams
 from .qmodel import NEG_INF
@@ -46,16 +49,20 @@ from .qmodel import NEG_INF
 MAX_D = 8
 
 
-def adaptive_d(num_candidates: jax.Array, n: int) -> jax.Array:
-    """Per-graph d from the paper's schedule. num_candidates: (B,)."""
+def adaptive_d(num_candidates: jax.Array, n: int,
+               max_d: int = MAX_D) -> jax.Array:
+    """Per-graph d from the paper's schedule (exactly 8/4/2/1 at the
+    default ``max_d=8``). num_candidates: (B,)."""
     c = num_candidates
-    return jnp.where(c > n / 2, 8,
-           jnp.where(c > n / 4, 4,
-           jnp.where(c > n / 8, 2, 1))).astype(jnp.int32)
+    return jnp.where(c > n / 2, max_d,
+           jnp.where(c > n / 4, max(max_d // 2, 1),
+           jnp.where(c > n / 8, max(max_d // 4, 1),
+                     max(max_d // 8, 1)))).astype(jnp.int32)
 
 
 def select_top_d(scores: jax.Array, candidate: jax.Array,
-                 use_adaptive: bool) -> Tuple[jax.Array, jax.Array]:
+                 use_adaptive: bool,
+                 max_d: int = MAX_D) -> Tuple[jax.Array, jax.Array]:
     """Alg. 4 lines 5-7: top-d selection mask from masked scores.
 
     Returns ``(sel, ncommit)``: the (B, N) union-of-one-hots commit mask
@@ -65,10 +72,11 @@ def select_top_d(scores: jax.Array, candidate: jax.Array,
     bit-identical.
     """
     b, n = candidate.shape
-    top_scores, top_idx = jax.lax.top_k(scores, MAX_D)      # (B, 8)
+    top_scores, top_idx = jax.lax.top_k(scores, min(max_d, n))  # (B, max_d)
     ncand = candidate.sum(-1)
-    d = adaptive_d(ncand, n) if use_adaptive else jnp.ones((b,), jnp.int32)
-    rank = jnp.arange(MAX_D)[None, :]
+    d = (adaptive_d(ncand, n, max_d) if use_adaptive
+         else jnp.ones((b,), jnp.int32))
+    rank = jnp.arange(top_idx.shape[1])[None, :]
     valid = (rank < d[:, None]) & (top_scores > NEG_INF / 2)
     sel = jnp.zeros((b, n), jnp.float32)
     sel = sel.at[jnp.arange(b)[:, None], top_idx].max(valid.astype(jnp.float32))
@@ -76,13 +84,15 @@ def select_top_d(scores: jax.Array, candidate: jax.Array,
 
 
 def apply_selection(state, scores, candidate, use_adaptive: bool,
-                    problem: str):
+                    problem: str, max_d: int = MAX_D):
     """Alg. 4 lines 5-9, env-polymorphic: top-d selection, the env's
     optional selection prune (MIS must thin adjacent picks out of a raw
     top-d set), and the env's commit/termination rule.  Shared verbatim by
     the host-loop step and the fused while_loop body so the two engines
-    stay bit-identical per problem."""
-    sel, ncommit = select_top_d(scores, candidate, use_adaptive)
+    stay bit-identical per problem.  Note the MIS prune scan is capped at
+    ``env._MAX_COMMIT`` kept picks per evaluation regardless of ``max_d``
+    (independence filtering is inherently sequential)."""
+    sel, ncommit = select_top_d(scores, candidate, use_adaptive, max_d)
     prune = env_lib.prune_rule(problem)
     if prune is not None:
         sel = prune(state, sel, scores)
@@ -93,20 +103,22 @@ def apply_selection(state, scores, candidate, use_adaptive: bool,
 
 @functools.partial(jax.jit,
                    static_argnames=("rep", "problem", "num_layers",
-                                    "use_adaptive", "kernel", "compute"))
+                                    "use_adaptive", "kernel", "compute",
+                                    "max_d"))
 def _inference_step(params: PolicyParams, state, *, rep: GraphRep,
                     problem: str, num_layers: int, use_adaptive: bool,
-                    kernel: str = "fused", compute: str = "f32"):
+                    kernel: str = "fused", compute: str = "f32",
+                    max_d: int = MAX_D):
     """One policy evaluation + top-d commit (Alg. 4 body, vectorized over B).
 
-    Identical on both representations: the backend supplies the scores,
+    Identical on all representations: the backend supplies the scores,
     the env registry the selection/commit/termination rules; only the
     state layout differs.  Finished graphs (no candidates) commit nothing.
     """
     scores = rep.scores(params, state, num_layers=num_layers,
                         kernel=kernel, compute=compute)     # (B, N) masked
     return apply_selection(state, scores, state.candidate, use_adaptive,
-                           problem)
+                           problem, max_d)
 
 
 def init_solve_state(rep: GraphRep, adj, problem: str = "mvc"):
@@ -120,7 +132,7 @@ def init_solve_state(rep: GraphRep, adj, problem: str = "mvc"):
     with an actionable error (``env.ensure_padding_safe``)."""
     env_lib.ensure_padding_safe(problem)
     state = rep.init_state(adj)
-    if isinstance(state, SparseGraphState):
+    if isinstance(state, (SparseGraphState, CsrGraphState)):
         flag = env_lib.sparse_residual_flag(problem)
         if state.residual != flag:
             state = dataclasses.replace(state, residual=flag)
@@ -143,7 +155,7 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
           step_fn: Optional[Callable] = None,
           rep: Union[str, GraphRep] = "dense", problem: str = "mvc",
           engine: str = "device", spatial=0, kernel: str = "fused",
-          compute: str = "f32") -> InferenceResult:
+          compute: str = "f32", max_d: int = MAX_D) -> InferenceResult:
     """Run Alg. 4 until every graph in the batch has a complete solution.
 
     multi_node=False reproduces the original d=1 algorithm; True enables the
@@ -159,6 +171,9 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
     ``step_fn`` may override the jitted step (host engine only; kept for
     custom drivers).  ``kernel``/``compute`` select the S2V layer lowering
     and matmul operand precision (DESIGN.md §12) on both engines.
+    ``max_d`` widens the adaptive schedule's commit cap beyond the paper's
+    8 — million-node solves set it to a few % of N so one solve is tens of
+    evaluations, not ~N/8.
     """
     from .mesh import normalize_spatial
     if engine not in ("host", "device"):
@@ -166,7 +181,7 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
     rep = get_rep(rep)
     state = init_solve_state(rep, adj0, problem)
     n = state.num_nodes
-    max_evals = max_evals or (n + MAX_D)
+    max_evals = max_evals or (n + max_d)
     dp, _sp = normalize_spatial(spatial)
 
     if engine == "device" and step_fn is None:
@@ -177,7 +192,7 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
         fused = get_solve_step(rep=rep, problem=problem,
                                num_layers=num_layers,
                                use_adaptive=multi_node, spatial=spatial,
-                               kernel=kernel, compute=compute)
+                               kernel=kernel, compute=compute, max_d=max_d)
         # the solve's single host↔device round-trip: one result fetch
         sol, evals, committed = jax.device_get(
             fused(params, state, jnp.asarray(max_evals, jnp.int32)))
@@ -194,7 +209,8 @@ def solve(params: PolicyParams, adj0, *, num_layers: int = 2,
     committed = np.zeros((state.batch,), np.int64)
     fn = step_fn or (lambda p, s: _inference_step(
         p, s, rep=rep, problem=problem, num_layers=num_layers,
-        use_adaptive=multi_node, kernel=kernel, compute=compute))
+        use_adaptive=multi_node, kernel=kernel, compute=compute,
+        max_d=max_d))
     for _ in range(max_evals):
         state, done, ncommit = fn(params, state)
         evals += 1

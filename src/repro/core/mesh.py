@@ -121,6 +121,14 @@ _SPARSE_FIELD_SPECS = {"neighbors": P(DATA, GRAPH, None),
                        "valid": P(DATA, GRAPH, None),
                        "candidate": P(DATA, GRAPH),
                        "solution": P(DATA, GRAPH)}
+# CSR rows are ragged, so edge arrays cannot split over `graph` (unequal
+# per-device edge counts) — csr shards the BATCH dim only; sp > 1 is
+# rejected up front by engine._check_csr_spatial.
+_CSR_FIELD_SPECS = {"indptr": P(DATA),
+                    "indices": P(DATA),
+                    "edge_mask": P(DATA),
+                    "candidate": P(DATA),
+                    "solution": P(DATA)}
 
 # positional shard_map in_spec tuples, derived from the field tables above
 # (the single source of truth) — callers prepend the replicated P() spec
@@ -139,8 +147,11 @@ _REPLAY_FIELD_SPECS = {"graph_idx": P(DATA), "solution": P(DATA, GRAPH),
 
 
 def state_field_specs(state) -> dict:
-    """Field-name → PartitionSpec for a GraphRep state (dense or sparse)."""
-    from .graphs import SparseGraphState
+    """Field-name → PartitionSpec for a GraphRep state (dense, sparse or
+    csr)."""
+    from .graphs import CsrGraphState, SparseGraphState
+    if isinstance(state, CsrGraphState):
+        return _CSR_FIELD_SPECS
     return (_SPARSE_FIELD_SPECS if isinstance(state, SparseGraphState)
             else _DENSE_FIELD_SPECS)
 
@@ -211,4 +222,18 @@ def sparse_per_device_bytes(n: int, max_deg: int, b: int, p: int,
         "solution": 4.0 * n * b / (p * dp),
         "candidates": 4.0 * n * b / (p * dp),
         "replay": 8.0 * replay_tuples * (n / p + 1) / dp,
+    }
+
+
+def csr_per_device_bytes(n: int, edges: int, b: int,
+                         replay_tuples: int = 0, dp: int = 1) -> dict:
+    """Flat CSR storage per device (DESIGN.md §13) — the EDGE-proportional
+    cost formula: 4-byte column ids + 1-byte mask per directed edge slot
+    plus the 4·(N+1) row pointers; no N² and no N·maxdeg term.  CSR shards
+    the batch only (sp ≡ 1), so everything divides by dp alone."""
+    return {
+        "adjacency": (5.0 * edges + 4.0 * (n + 1)) * b / dp,
+        "solution": 4.0 * n * b / dp,
+        "candidates": 4.0 * n * b / dp,
+        "replay": 8.0 * replay_tuples * (n + 1) / dp,
     }

@@ -39,7 +39,7 @@ class PolicyConfig:
     eps_decay_steps: int = 500
     minibatch: int = 64          # B tuples per GD iteration
     grad_iters: int = 1          # τ (paper §4.5.2)
-    graph_rep: str = "dense"     # GraphRep backend: "dense" | "sparse"
+    graph_rep: str = "dense"     # GraphRep backend: "dense" | "sparse" | "csr"
     # Training-engine selection (DESIGN.md §8), config-driven like graph_rep:
     engine: str = "device"       # "device" (fused jitted step) | "host"
     # 2-D (data, graph) device-mesh spec (DESIGN.md §10): a (dp, sp) tuple

@@ -1,0 +1,200 @@
+"""Neighbor-sampled training on one resident graph (DESIGN.md §13).
+
+The paper trains on batches of small graphs; its headline EVALUATION
+graphs (30M+ edges, §6.4) never fit that mold.  Dai et al. (1704.01665)
+show S2V policies transfer from small training graphs to much larger
+evaluation graphs, and Drori et al. (2006.03750) solve real-world graphs
+linear-time with the same recipe — so the paper-scale training story is:
+keep ONE huge graph resident as CSR arrays, train on small sampled
+subgraphs of it, and run fused inference directly on the resident arrays.
+
+:class:`NeighborSampler` mirrors the input/output contract of
+torch_geometric's ``NeighborSampler``: seed-node batches (a shuffled
+epoch partition of the node set), k-hop neighbor expansion with a
+degree-capped fanout per hop (each frontier node contributes at most
+``fanouts[h]`` sampled neighbors, drawn uniformly from its CSR slice),
+and subgraph extraction that relabels the touched nodes to a local id
+space with the seeds first.  Everything is host-side vectorized numpy on
+the resident ``(indptr, indices)`` arrays — per-hop work is one fancy
+gather, never a per-node Python loop.
+
+Unlike torch_geometric the output is FIXED-SHAPE: every subgraph is
+padded to (``node_budget`` nodes, ``edge_budget`` directed edge slots) —
+the budgets default to the exact worst-case expansion bound — so a stack
+of subgraphs forms one :class:`~repro.core.graphs.CsrGraphBatch` that the
+fused train step can jit once and reuse every iteration.  Padding nodes
+are isolated (degree 0) and therefore inert under the padding-safety
+contract every env already honors (``env.ensure_padding_safe``).
+
+Sampling is deterministic: the subgraph drawn for a given
+``(sampler seed, seed-node batch)`` pair is a pure function of both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .graphs import CsrGraphBatch, csr_batch_from_arrays, csr_from_edges
+
+__all__ = ["NeighborSampler", "SampledSubgraph"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledSubgraph:
+    """One fixed-shape training subgraph extracted from the resident graph.
+
+    graph:     B=1 :class:`CsrGraphBatch` over the LOCAL id space
+               (node_budget nodes, edge_budget edge slots).
+    node_map:  (node_budget,) int64 — local id → resident-graph global id,
+               -1 on padding slots.  Seeds occupy the first ``len(seeds)``
+               local ids, in seed order (the torch_geometric ``n_id``
+               convention).
+    seeds:     the global seed-node ids this subgraph was grown from.
+    num_nodes: count of real (non-padding) local nodes.
+    """
+    graph: CsrGraphBatch
+    node_map: np.ndarray
+    seeds: np.ndarray
+    num_nodes: int
+
+
+class NeighborSampler:
+    """k-hop degree-capped neighbor sampling over one resident CSR graph.
+
+    indptr/indices: the resident graph's CSR arrays ((N+1,), (E,)).
+    batch_size:     seed nodes per subgraph.
+    fanouts:        per-hop neighbor caps, outermost hop first (the
+                    torch_geometric ``sizes`` argument).  Each frontier
+                    node contributes ≤ fanouts[h] sampled neighbors
+                    (uniform draws over its neighbor slice; repeats
+                    collapse, so low-degree nodes keep their true
+                    neighborhood).
+    node_budget /   fixed output shape; default to the exact expansion
+    edge_budget:    bound B·(1+f₁+f₁f₂+…) nodes and its 2·B·(f₁+f₁f₂+…)
+                    symmetrized directed edge bound, so the defaults never
+                    truncate.  Explicit smaller budgets truncate nodes in
+                    first-seen order (seeds always survive) and drop edges
+                    with a truncated endpoint.
+    seed:           base RNG seed; sampling is a pure function of
+                    ``(seed, seed-node batch)``.
+    """
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray, *,
+                 batch_size: int, fanouts: Sequence[int] = (8, 4),
+                 seed: int = 0, node_budget: Optional[int] = None,
+                 edge_budget: Optional[int] = None):
+        self.indptr = np.asarray(indptr, np.int64)
+        self.indices = np.asarray(indices, np.int64)
+        self.num_nodes = len(self.indptr) - 1
+        self.batch_size = int(batch_size)
+        self.fanouts = tuple(int(f) for f in fanouts)
+        if not self.fanouts or min(self.fanouts) < 1:
+            raise ValueError(f"fanouts must be positive, got {fanouts!r}")
+        self.seed = int(seed)
+        # worst-case expansion: frontier_h ≤ B·∏_{i≤h} f_i new nodes/hop
+        paths, total_draws = 1, 0
+        for f in self.fanouts:
+            paths *= f
+            total_draws += self.batch_size * paths
+        self.node_budget = int(node_budget or
+                               (self.batch_size + total_draws))
+        self.edge_budget = int(edge_budget or max(2 * total_draws, 1))
+        if self.node_budget < self.batch_size:
+            raise ValueError(
+                f"node_budget={self.node_budget} cannot hold the "
+                f"{self.batch_size} seed nodes")
+
+    # -- seed-node batches ---------------------------------------------------
+    def seed_batches(self, epoch: int = 0) -> Iterator[np.ndarray]:
+        """Shuffled partition of the node set into seed batches — one epoch
+        covers every node exactly once (the trailing partial batch is
+        kept).  Deterministic per (sampler seed, epoch)."""
+        rng = np.random.default_rng([self.seed, int(epoch)])
+        perm = rng.permutation(self.num_nodes)
+        for i in range(0, self.num_nodes, self.batch_size):
+            yield perm[i:i + self.batch_size]
+
+    # -- k-hop expansion -----------------------------------------------------
+    def sample(self, seeds) -> SampledSubgraph:
+        """Grow one fixed-shape subgraph from ``seeds`` (global node ids)."""
+        seeds = np.asarray(seeds, np.int64)
+        rng = np.random.default_rng([self.seed, 1 + len(seeds)]
+                                    + [int(s) for s in seeds])
+        seen = np.zeros((self.num_nodes,), bool)
+        seen[seeds] = True
+        order: List[np.ndarray] = [seeds]
+        src_parts: List[np.ndarray] = []
+        dst_parts: List[np.ndarray] = []
+        frontier = seeds
+        for f in self.fanouts:
+            deg = self.indptr[frontier + 1] - self.indptr[frontier]
+            has = deg > 0
+            fr, dg = frontier[has], deg[has]
+            if fr.size == 0:
+                break
+            # f uniform draws per frontier node over its neighbor slice
+            # (with replacement — repeats collapse at dedupe, so the cap
+            # is "≤ f distinct neighbors", not exactly f)
+            offs = (rng.random((fr.size, f)) * dg[:, None]).astype(np.int64)
+            nb = self.indices[self.indptr[fr][:, None] + offs]   # (m, f)
+            src_parts.append(np.repeat(fr, f))
+            dst_parts.append(nb.reshape(-1))
+            fresh = np.unique(nb.reshape(-1))
+            fresh = fresh[~seen[fresh]]
+            seen[fresh] = True
+            order.append(fresh)
+            frontier = fresh
+        nodes = np.concatenate(order)[:self.node_budget]
+
+        glob2loc = np.full((self.num_nodes,), -1, np.int64)
+        glob2loc[nodes] = np.arange(len(nodes))
+        if src_parts:
+            src = glob2loc[np.concatenate(src_parts)]
+            dst = glob2loc[np.concatenate(dst_parts)]
+            keep = (src >= 0) & (dst >= 0)       # truncated endpoints drop
+            src, dst = src[keep], dst[keep]
+        else:
+            src = dst = np.zeros((0,), np.int64)
+        indptr_l, indices_l = csr_from_edges(self.node_budget, src, dst)
+        if len(indices_l) > self.edge_budget:
+            raise ValueError(
+                f"sampled subgraph has {len(indices_l)} directed edges, "
+                f"above edge_budget={self.edge_budget}; raise the budget")
+        graph = csr_batch_from_arrays(indptr_l, indices_l,
+                                      max_edges=self.edge_budget)
+        node_map = np.full((self.node_budget,), -1, np.int64)
+        node_map[:len(nodes)] = nodes
+        return SampledSubgraph(graph=graph, node_map=node_map, seeds=seeds,
+                               num_nodes=len(nodes))
+
+    # -- training on-ramp ----------------------------------------------------
+    def subgraphs(self, epoch: int = 0) -> Iterator[SampledSubgraph]:
+        """One epoch of sampled subgraphs (one per seed batch)."""
+        for seeds in self.seed_batches(epoch):
+            yield self.sample(seeds)
+
+    def training_batch(self, num_graphs: int, epoch: int = 0
+                       ) -> Tuple[CsrGraphBatch, np.ndarray]:
+        """Stack ``num_graphs`` subgraphs into one G-graph
+        :class:`CsrGraphBatch` training dataset (cycling into later epochs
+        if one epoch has fewer seed batches).  Returns ``(batch,
+        node_maps (G, node_budget))`` — the batch plugs directly into the
+        fused train step as its dataset ``source``; node_maps translate
+        learned local solutions back to resident-graph ids."""
+        subs: List[SampledSubgraph] = []
+        e = epoch
+        while len(subs) < num_graphs:
+            for sg in self.subgraphs(e):
+                subs.append(sg)
+                if len(subs) == num_graphs:
+                    break
+            e += 1
+        batch = CsrGraphBatch(
+            indptr=jnp.concatenate([s.graph.indptr for s in subs]),
+            indices=jnp.concatenate([s.graph.indices for s in subs]),
+            edge_mask=jnp.concatenate([s.graph.edge_mask for s in subs]))
+        node_maps = np.stack([s.node_map for s in subs])
+        return batch, node_maps

@@ -16,6 +16,7 @@ from .backend import default_interpret as _default_interpret
 from .s2v_fused import (fused_s2v_layer as _fused_s2v_layer,
                         fused_s2v_layer_sparse as _fused_s2v_layer_sparse,
                         mp_aggregate as _mp_aggregate)
+from .s2v_csr import fused_s2v_layer_csr as _fused_s2v_layer_csr
 from .s2v_gather import sparse_mp_aggregate as _sparse_mp_aggregate
 from .wkv6 import wkv6_chunked as _wkv6_chunked
 from .swa import swa_attention as _swa_attention
@@ -44,6 +45,18 @@ def fused_s2v_layer_sparse(theta4, x, neighbors, edge, base, *,
     return _fused_s2v_layer_sparse(theta4, x, neighbors, edge, base,
                                    tile_n=tile_n, compute_dtype=compute_dtype,
                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_e", "compute_dtype",
+                                             "interpret"))
+def fused_s2v_layer_csr(theta4, x, indices, row_ids, edge_w, base, *,
+                        tile_e: int = 512, compute_dtype=jnp.float32,
+                        interpret: bool | None = None):
+    """Fused CSR (flat edge-array) structure2vec layer, one launch."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused_s2v_layer_csr(theta4, x, indices, row_ids, edge_w, base,
+                                tile_e=tile_e, compute_dtype=compute_dtype,
+                                interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "tile_l",

@@ -1,0 +1,131 @@
+"""Fused CSR structure2vec layer: edge-tiled gather/segment-sum super-kernel.
+
+The CSR rep stores topology as flat edge arrays (DESIGN.md §13): column ids
+``indices`` (B, E), source rows ``row_ids`` (B, E), per-edge residual
+factors ``edge_w`` (B, E).  One embedding layer is
+
+    relu(base + θ4 @ segment_sum(x[:, indices] · edge_w, row_ids))
+
+This kernel runs that whole chain in ONE launch per layer, tiled over EDGE
+blocks — the CSR analogue of ``s2v_fused.py``'s node-tiled kernels:
+
+- grid (B, E/TE) with the edge axis innermost (sequential), accumulating
+  the (K, N) neighbor-sum into an f32 VMEM scratch;
+- per tile, the gather is expressed as x @ colselᵀ and the segment-sum
+  scatter as (weighted) @ rowsel, where colsel/rowsel are on-chip one-hot
+  expansions of the tile's column/row ids via ``broadcasted_iota``
+  comparisons — both contractions run on the MXU.  Padded edge slots carry
+  the sentinel column id N, which matches no one-hot column in [0, N), and
+  zero edge weight — doubly inert, so x needs no sentinel column;
+- the final edge step applies the fused epilogue relu(base + θ4 @ acc), so
+  the (B, K, N) neighbor-sum tensor never touches HBM.
+
+Mixed precision follows DESIGN.md §12: ``compute_dtype`` casts the matmul
+OPERANDS (x, edge factors, selection matrices, θ4); every accumulation is
+f32 via ``preferred_element_type`` and the epilogue stays f32.
+
+VMEM footprint per step is the (TE, N) selection tiles plus the (K, N)
+accumulator — ``tile_e`` bounds the former, but the latter grows with N,
+so the compiled kernel targets graphs whose (K, N) panel fits VMEM
+(N ≲ 100k at K=16); beyond that the jnp segment-sum composition in
+``core.s2v_csr`` (the non-TPU path) is the right tool.  ``interpret=None``
+auto-detects the backend (compiled on TPU, interpret elsewhere).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
+
+
+def _fused_csr_kernel(t4_ref, idx_ref, row_ref, w_ref, x_ref, base_ref,
+                      o_ref, acc):
+    """Grid (B, E/TE), edge axis innermost (sequential).
+
+    Blocks: idx/row/w (1, TE), x/base (1, K, N) [full], out (1, K, N);
+    acc (K, N) f32 VMEM scratch persisting across the edge axis."""
+    ei = pl.program_id(1)
+
+    @pl.when(ei == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    idx = idx_ref[0]                                        # (TE,) int32
+    row = row_ref[0]                                        # (TE,) int32
+    w = w_ref[0]                                            # (TE,) cd
+    te = idx.shape[0]
+    nf = acc.shape[1]
+    cd = w.dtype
+    cols = jax.lax.broadcasted_iota(jnp.int32, (te, nf), 1)
+    colsel = (cols == idx[:, None]).astype(cd)              # (TE, N)
+    # gathered[k, t] = Σ_j x[k, j]·[idx[t] = j] — MXU contraction over j
+    gathered = jax.lax.dot_general(
+        x_ref[0], colsel, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (K, TE) f32
+    weighted = gathered.astype(cd) * w[None, :]
+    rowsel = (cols == row[:, None]).astype(cd)              # (TE, N)
+    # acc[k, n] += Σ_t weighted[k, t]·[row[t] = n] — segment-sum on the MXU
+    acc[...] += jax.lax.dot_general(
+        weighted, rowsel, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (K, N) f32
+
+    @pl.when(ei == pl.num_programs(1) - 1)
+    def _epilogue():
+        nbr = acc[...].astype(t4_ref.dtype)        # one rounding, f32 acc
+        e3 = jax.lax.dot_general(t4_ref[...], nbr, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        o_ref[0] = jnp.maximum(base_ref[0] + e3, 0.0)
+
+
+def fused_s2v_layer_csr(theta4: jax.Array, x: jax.Array, indices: jax.Array,
+                        row_ids: jax.Array, edge_w: jax.Array,
+                        base: jax.Array, *, tile_e: int = 512,
+                        compute_dtype=jnp.float32,
+                        interpret: bool | None = None) -> jax.Array:
+    """One full CSR embedding layer in a single kernel launch, matching
+    ``core.s2v_csr._csr_layer_jnp``.
+
+    theta4:  (K, K) float.
+    x:       (B, K, N) float — embeddings, NO sentinel column (padded edge
+             slots carry id N and match no one-hot column).
+    indices: (B, E) int32 — column ids, sentinel N on padding.
+    row_ids: (B, E) int32 — source-row ids (padding rows are don't-care:
+             their edge weight is zero).
+    edge_w:  (B, E) float — residual-edge factors (0 for padding).
+    base:    (B, K, N) float — embed1 + embed2 residual term.
+    Returns (B, K, N) float32.
+    """
+    interpret = resolve_interpret(interpret)
+    cd = jnp.dtype(compute_dtype)
+    b, k, n = x.shape
+    _, e = indices.shape
+    te = min(tile_e, e)
+    pad = (-e) % te
+    if pad:
+        # padding edges: sentinel column (gathers zero), zero weight, row 0
+        indices = jnp.pad(indices, ((0, 0), (0, pad)), constant_values=n)
+        row_ids = jnp.pad(row_ids, ((0, 0), (0, pad)))
+        edge_w = jnp.pad(edge_w, ((0, 0), (0, pad)))
+    epad = e + pad
+
+    return pl.pallas_call(
+        _fused_csr_kernel,
+        grid=(b, epad // te),
+        in_specs=[
+            pl.BlockSpec((k, k), lambda bi, ei: (0, 0)),
+            pl.BlockSpec((1, te), lambda bi, ei: (bi, ei)),
+            pl.BlockSpec((1, te), lambda bi, ei: (bi, ei)),
+            pl.BlockSpec((1, te), lambda bi, ei: (bi, ei)),
+            pl.BlockSpec((1, k, n), lambda bi, ei: (bi, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda bi, ei: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, n), lambda bi, ei: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((k, n), jnp.float32)],
+        interpret=interpret,
+    )(theta4.astype(cd), indices.astype(jnp.int32),
+      row_ids.astype(jnp.int32), edge_w.astype(cd), x.astype(cd),
+      base.astype(jnp.float32))

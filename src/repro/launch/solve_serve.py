@@ -31,7 +31,7 @@ def main():
                          "through the same padded buckets — the registry's "
                          "padding-safety contract guarantees isolated "
                          "padding nodes never score or commit")
-    ap.add_argument("--rep", choices=["dense", "sparse"], default="dense")
+    ap.add_argument("--rep", choices=["dense", "sparse", "csr"], default="dense")
     ap.add_argument("--spatial", default="0",
                     help="2-D (data, graph) mesh spec: 'dp,sp' shards each "
                          "bucket dispatch dp ways over the batch (data "

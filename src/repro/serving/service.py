@@ -83,13 +83,19 @@ class GraphSolverService:
         traffic-independent safe bound), keeping shapes fully static; pass
         a smaller cap when the traffic's degrees are bounded (graphs
         exceeding it are rejected rather than silently truncated).
+    csr_max_edges : csr backend only — directed edge slots per bucket, the
+        edge-array analogue of ``sparse_max_degree``.  The default pins it
+        to nb² (the traffic-independent bound); pass the traffic's true
+        edge bound to keep per-dispatch state edge-proportional (graphs
+        exceeding it are rejected rather than silently truncated).
     """
 
     def __init__(self, params: PolicyParams, cfg: PolicyConfig, *,
                  rep: Union[str, GraphRep, None] = None,
                  multi_node: bool = True, max_batch: int = 8,
                  min_bucket: int = MIN_BUCKET,
-                 sparse_max_degree: Optional[int] = None):
+                 sparse_max_degree: Optional[int] = None,
+                 csr_max_edges: Optional[int] = None):
         from ..core.engine import get_solve_step
         self.params = params
         self.cfg = cfg
@@ -102,6 +108,7 @@ class GraphSolverService:
         self.rows_per_dispatch = max_batch * self.mesh_shape[0]
         self.min_bucket = min_bucket
         self.sparse_max_degree = sparse_max_degree
+        self.csr_max_edges = csr_max_edges
         self.stats = ServiceStats()
         self._queue: Deque[SolveRequest] = deque()
         self._next_id = 0
@@ -143,15 +150,20 @@ class GraphSolverService:
     # -- dispatch -----------------------------------------------------------
     def _bucket_rep(self, nb: int) -> GraphRep:
         """The backend a bucket dispatches through.  Sparse states must pin
-        their neighbor-list width per bucket (the singleton derives it from
-        each batch's true max degree, which would retrace the jitted solve
-        whenever traffic changes it)."""
-        if self.rep.name != "sparse":
+        their neighbor-list width per bucket, csr states their edge-slot
+        count (the singletons derive both from each batch's true topology,
+        which would retrace the jitted solve whenever traffic changes
+        it)."""
+        if self.rep.name not in ("sparse", "csr"):
             return self.rep
         rep = self._bucket_reps.get(nb)
         if rep is None:
-            from ..core.graphrep import SparseRep
-            rep = SparseRep(max_degree=self.sparse_max_degree or nb)
+            if self.rep.name == "csr":
+                from ..core.graphrep import CsrRep
+                rep = CsrRep(max_edges=self.csr_max_edges or nb * nb)
+            else:
+                from ..core.graphrep import SparseRep
+                rep = SparseRep(max_degree=self.sparse_max_degree or nb)
             self._bucket_reps[nb] = rep
         return rep
 

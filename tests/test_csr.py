@@ -1,0 +1,369 @@
+"""CSR GraphRep backend + Pallas edge-tiled kernel + neighbor sampler
+(DESIGN.md §13).
+
+Acceptance surface: csr↔sparse↔dense solve parity (solutions, eval
+counts and commit counts bit-identical on all four problems, both
+engines), kernel-vs-jnp-oracle parity across edge-tile sizes including
+padded-edge inertness and isolated nodes, custom_vjp gradient parity,
+streaming BA generation + npz cache roundtrip, the edge-proportional
+state-bytes claim, neighbor-sampler contract units
+(shapes/determinism/coverage/fanout caps/padding inertness), a fused
+train-step smoke on sampled subgraphs, the sp>1 fail-fast, and a
+slow-marked N=100k paper-regime smoke solve.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (PolicyConfig, init_policy, random_graph_batch,
+                        solve, NeighborSampler)
+from repro.core import env as env_lib
+from repro.core.graphrep import CSR, DENSE, SPARSE, get_rep
+from repro.core.graphs import (CsrGraphBatch, CsrGraphState,
+                               barabasi_albert_edges, cached_ba_csr,
+                               csr_batch_from_arrays, csr_batch_from_dense,
+                               csr_batch_to_dense, csr_from_edges,
+                               csr_row_ids)
+from repro.core.s2v_csr import _csr_layer_hw, _csr_layer_jnp
+from repro.kernels import ops
+
+RNG = np.random.default_rng(11)
+PROBLEMS = ("mvc", "maxcut", "mis", "mds")
+
+
+def _adj_batch(b=3, n=32, rho=0.18, seed=4):
+    return random_graph_batch("er", n, b, seed=seed, rho=rho)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_policy(jax.random.key(0), PolicyConfig(embed_dim=8))
+
+
+# ---------------------------------------------------------------------------
+# CSR construction invariants.
+# ---------------------------------------------------------------------------
+
+def test_csr_roundtrips_dense():
+    adj = np.asarray(_adj_batch())
+    g = csr_batch_from_dense(jnp.asarray(adj))
+    np.testing.assert_array_equal(csr_batch_to_dense(g), adj)
+
+
+def test_csr_max_edges_too_small_raises():
+    adj = _adj_batch()
+    true_e = int(np.asarray(adj).sum(axis=(1, 2)).max())
+    with pytest.raises(ValueError, match="refusing to silently drop"):
+        csr_batch_from_dense(adj, max_edges=true_e - 1)
+
+
+def test_row_ids_and_padding_sentinels():
+    adj = _adj_batch(b=2, n=16)
+    g = csr_batch_from_dense(adj, max_edges=200)   # force padded slots
+    e = g.indices.shape[1]
+    rid = np.asarray(csr_row_ids(g.indptr, e))
+    ip = np.asarray(g.indptr)
+    mask = np.asarray(g.edge_mask)
+    for b in range(2):
+        true_e = ip[b, -1]
+        want = np.repeat(np.arange(16), np.diff(ip[b]))
+        np.testing.assert_array_equal(rid[b, :true_e], want)
+        assert not mask[b, true_e:].any()
+        np.testing.assert_array_equal(np.asarray(g.indices)[b, true_e:], 16)
+
+
+def test_streaming_ba_generator_valid_csr():
+    n, d = 300, 5
+    src, dst = barabasi_albert_edges(n, d=d, seed=3)
+    indptr, indices = csr_from_edges(n, src, dst)
+    # self-loops from the raw copy-model draws are dropped in conversion
+    rid0 = np.repeat(np.arange(n), np.diff(indptr))
+    assert (rid0 != indices).all()
+    assert indptr[0] == 0 and indptr[-1] == len(indices)
+    # symmetric: every directed edge has its reverse
+    rid = np.repeat(np.arange(n), np.diff(indptr))
+    fwd = set(zip(rid.tolist(), indices.tolist()))
+    assert all((v, u) in fwd for u, v in fwd)
+    # sorted, deduped rows
+    for u in range(n):
+        row = indices[indptr[u]:indptr[u + 1]]
+        assert (np.diff(row) > 0).all()
+    # copy-model degree bound: node t adds min(t, d) undirected edges
+    assert len(indices) <= 2 * sum(min(t, d) for t in range(n))
+
+
+def test_cached_ba_csr_roundtrip(tmp_path):
+    ip1, ix1 = cached_ba_csr(400, d=4, seed=7, cache_dir=tmp_path)
+    assert (tmp_path / "ba_n400_d4_s7.npz").exists()
+    ip2, ix2 = cached_ba_csr(400, d=4, seed=7, cache_dir=tmp_path)
+    np.testing.assert_array_equal(ip1, ip2)
+    np.testing.assert_array_equal(ix1, ix2)
+
+
+def test_state_bytes_csr_below_sparse_on_er():
+    """DESIGN.md §13 acceptance: flat CSR undercuts the max-degree-padded
+    sparse layout at equal N (ER degree skew pads most rows)."""
+    adj = random_graph_batch("er", 256, 2, seed=6, rho=0.0156)
+    sb = SPARSE.state_bytes(SPARSE.init_state(adj))
+    cb = CSR.state_bytes(CSR.init_state(adj))
+    assert cb < sb
+
+
+# ---------------------------------------------------------------------------
+# Solve parity: csr ↔ sparse ↔ dense, all four problems, both engines.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("problem", PROBLEMS)
+@pytest.mark.parametrize("engine", ["device", "host"])
+def test_solve_parity_three_reps(params, problem, engine):
+    adj = _adj_batch(b=3, n=32, rho=0.15)
+    outs = {name: solve(params, adj, num_layers=2, multi_node=True,
+                        rep=name, problem=problem, engine=engine)
+            for name in ("dense", "sparse", "csr")}
+    for name in ("sparse", "csr"):
+        np.testing.assert_array_equal(outs["dense"].solution,
+                                      outs[name].solution)
+        assert outs["dense"].policy_evals == outs[name].policy_evals
+        np.testing.assert_array_equal(outs["dense"].nodes_committed,
+                                      outs[name].nodes_committed)
+
+
+def test_csr_batch_solves_directly(params):
+    """A CsrGraphBatch (the paper-scale on-ramp: no dense array ever
+    built) feeds ``solve`` directly and matches the dense result."""
+    adj = _adj_batch(b=2, n=24)
+    g = csr_batch_from_dense(adj)
+    via_csr = solve(params, g, num_layers=2, multi_node=True, rep="csr")
+    via_dense = solve(params, adj, num_layers=2, multi_node=True)
+    np.testing.assert_array_equal(via_csr.solution, via_dense.solution)
+
+
+@pytest.mark.parametrize("problem", PROBLEMS)
+def test_state_from_tuples_parity(params, problem):
+    """Replay re-materialization parity across reps under each env's
+    residual/candidate mode: identical candidates and masked scores."""
+    adj = _adj_batch(b=4, n=20, rho=0.25)
+    residual = env_lib.residual_mode(problem)
+    cand_fn = env_lib.candidate_rule(problem)
+    gi = np.array([2, 0, 3, 1], np.int32)
+    sol = (RNG.random((4, 20)) < 0.3).astype(np.float32)
+    states = {}
+    for rep in (DENSE, SPARSE, CSR):
+        src = rep.prepare_dataset(adj)
+        states[rep.name] = rep.state_from_tuples(
+            src, gi, jnp.asarray(sol), residual=residual,
+            candidate_fn=cand_fn)
+    for name in ("sparse", "csr"):
+        np.testing.assert_array_equal(
+            np.asarray(states["dense"].candidate),
+            np.asarray(states[name].candidate))
+    sc = {rep.name: np.asarray(rep.scores(params, states[rep.name],
+                                          num_layers=2))
+          for rep in (DENSE, SPARSE, CSR)}
+    np.testing.assert_allclose(sc["csr"], sc["dense"], rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(sc["csr"], sc["sparse"], rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Edge-tiled kernel vs the jnp oracle (interpret mode off-TPU).
+# ---------------------------------------------------------------------------
+
+def _csr_case(b=2, k=8, n=24, rho=0.3, max_edges=None, isolate=0):
+    adj = (RNG.random((b, n, n)) < rho).astype(np.float32)
+    adj = np.maximum(adj, adj.transpose(0, 2, 1))
+    np.einsum("bii->bi", adj)[:] = 0
+    if isolate:
+        adj[:, -isolate:, :] = 0.0
+        adj[:, :, -isolate:] = 0.0
+    g = csr_batch_from_dense(jnp.asarray(adj), max_edges=max_edges)
+    e = g.indices.shape[1]
+    rid = csr_row_ids(g.indptr, e)
+    x = (RNG.random((b, k, n), np.float32) - 0.5).astype(np.float32)
+    edge_w = (np.asarray(g.edge_mask, np.float32)
+              * RNG.random((b, e)).astype(np.float32))
+    base = (RNG.random((b, k, n), np.float32) - 0.5).astype(np.float32)
+    t4 = ((RNG.random((k, k), np.float32) - 0.5) * 0.4).astype(np.float32)
+    return g, rid, t4, x, edge_w, base
+
+
+@pytest.mark.parametrize("tile_e", [4, 16, 128])
+def test_fused_csr_kernel_vs_oracle(tile_e):
+    g, rid, t4, x, edge_w, base = _csr_case()
+    out = np.asarray(ops.fused_s2v_layer_csr(t4, x, g.indices, rid, edge_w,
+                                             base, tile_e=tile_e))
+    want = np.asarray(_csr_layer_jnp(t4, jnp.asarray(x), g.indices, rid,
+                                     jnp.asarray(edge_w),
+                                     jnp.asarray(base), jnp.float32))
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_csr_kernel_bf16_matches_bf16_oracle():
+    g, rid, t4, x, edge_w, base = _csr_case()
+    out = np.asarray(ops.fused_s2v_layer_csr(t4, x, g.indices, rid, edge_w,
+                                             base, tile_e=16,
+                                             compute_dtype=jnp.bfloat16))
+    want = np.asarray(_csr_layer_jnp(t4, jnp.asarray(x), g.indices, rid,
+                                     jnp.asarray(edge_w),
+                                     jnp.asarray(base), jnp.bfloat16))
+    np.testing.assert_allclose(out, want, rtol=2e-2, atol=2e-2)
+
+
+def test_fused_csr_kernel_padded_edges_inert():
+    """Padding slots (sentinel column id N, masked weights) must contribute
+    exactly zero even with poisoned weights — the iota one-hot has no
+    column N and the zero-padded tile rows aggregate to row 0 with weight
+    re-zeroed by the mask product upstream; here we poison AFTER masking
+    to prove the sentinel alone suffices in the kernel."""
+    g, rid, t4, x, edge_w, base = _csr_case(max_edges=400)
+    hot = edge_w.copy()
+    hot[np.asarray(g.indices) == x.shape[-1]] = 5.0
+    out = np.asarray(ops.fused_s2v_layer_csr(t4, x, g.indices, rid, hot,
+                                             base, tile_e=16))
+    want = np.asarray(ops.fused_s2v_layer_csr(t4, x, g.indices, rid,
+                                              edge_w, base, tile_e=16))
+    np.testing.assert_array_equal(out, want)
+
+
+def test_fused_csr_kernel_isolated_nodes():
+    g, rid, t4, x, edge_w, base = _csr_case(isolate=6)
+    out = np.asarray(ops.fused_s2v_layer_csr(t4, x, g.indices, rid, edge_w,
+                                             base, tile_e=16))
+    np.testing.assert_array_equal(out[:, :, -6:],
+                                  np.maximum(base[:, :, -6:], 0.0))
+
+
+def test_csr_layer_custom_vjp_grad_parity():
+    g, rid, t4, x, edge_w, base = _csr_case(b=1)
+    idx, cd = g.indices, jnp.float32
+    args = (jnp.asarray(t4), jnp.asarray(x), jnp.asarray(edge_w),
+            jnp.asarray(base))
+    g_hw = jax.grad(lambda t, xx, e, b: _csr_layer_hw(
+        t, xx, idx, rid, e, b, cd).sum(), argnums=(0, 1, 2, 3))(*args)
+    g_jn = jax.grad(lambda t, xx, e, b: _csr_layer_jnp(
+        t, xx, idx, rid, e, b, cd).sum(), argnums=(0, 1, 2, 3))(*args)
+    for a, b_ in zip(g_hw, g_jn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Neighbor sampler contract.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def resident():
+    n = 1500
+    src, dst = barabasi_albert_edges(n, d=4, seed=0)
+    return (n,) + csr_from_edges(n, src, dst)
+
+
+def test_sampler_shapes_and_determinism(resident):
+    n, ip, ix = resident
+    s = NeighborSampler(ip, ix, batch_size=6, fanouts=(5, 3), seed=2)
+    seeds = np.array([3, 77, 400])
+    a, b = s.sample(seeds), s.sample(seeds)
+    assert a.graph.indptr.shape == (1, s.node_budget + 1)
+    assert a.graph.indices.shape == (1, s.edge_budget)
+    assert a.node_map.shape == (s.node_budget,)
+    np.testing.assert_array_equal(np.asarray(a.graph.indices),
+                                  np.asarray(b.graph.indices))
+    np.testing.assert_array_equal(a.node_map, b.node_map)
+    # seeds-first local id convention
+    np.testing.assert_array_equal(a.node_map[:3], seeds)
+
+
+def test_sampler_epoch_covers_every_node_once(resident):
+    n, ip, ix = resident
+    s = NeighborSampler(ip, ix, batch_size=64, fanouts=(4,), seed=0)
+    seeds = np.concatenate(list(s.seed_batches(epoch=1)))
+    assert sorted(seeds.tolist()) == list(range(n))
+    # different epochs shuffle differently
+    seeds0 = np.concatenate(list(s.seed_batches(epoch=0)))
+    assert not np.array_equal(seeds, seeds0)
+
+
+def test_sampler_subgraph_edges_exist_and_fanout_capped(resident):
+    n, ip, ix = resident
+    f1 = 4
+    s = NeighborSampler(ip, ix, batch_size=1, fanouts=(f1,), seed=5)
+    sg = s.sample(np.array([10]))
+    dense = csr_batch_to_dense(sg.graph)[0]
+    assert np.array_equal(dense, dense.T) and np.trace(dense) == 0
+    # the seed's sampled degree respects the hop cap
+    assert dense[0].sum() <= f1
+    # every subgraph edge is a resident edge
+    full = np.zeros((n, n), bool)
+    rid = np.repeat(np.arange(n), np.diff(ip))
+    full[rid, ix] = True
+    li, lj = np.nonzero(dense[:sg.num_nodes, :sg.num_nodes])
+    assert full[sg.node_map[li], sg.node_map[lj]].all()
+    # padding nodes are isolated (inert under the env contract)
+    assert dense[sg.num_nodes:, :].sum() == 0
+
+
+def test_sampler_training_batch_stacks(resident):
+    n, ip, ix = resident
+    s = NeighborSampler(ip, ix, batch_size=4, fanouts=(4, 3), seed=1)
+    batch, maps = s.training_batch(5)
+    assert isinstance(batch, CsrGraphBatch)
+    assert batch.indptr.shape == (5, s.node_budget + 1)
+    assert batch.indices.shape == (5, s.edge_budget)
+    assert maps.shape == (5, s.node_budget)
+
+
+def test_sampler_train_smoke(resident):
+    """Fused train step end-to-end on neighbor-sampled subgraphs with
+    graph_rep="csr" — the paper-scale training on-ramp."""
+    from repro.core import Agent, engine_init, get_train_step
+    n, ip, ix = resident
+    s = NeighborSampler(ip, ix, batch_size=4, fanouts=(4, 3), seed=0)
+    source, _maps = s.training_batch(6)
+    ns = source.num_nodes
+    cfg = PolicyConfig(embed_dim=8, num_layers=2, minibatch=8,
+                       replay_capacity=64, learning_rate=1e-3,
+                       graph_rep="csr")
+    agent = Agent(cfg, num_nodes=ns)
+    fused = get_train_step(cfg, rep=CSR, problem="mvc", tau=2,
+                           target_mode="stored")
+    es = engine_init(cfg, agent.params, agent.opt, ns, seed=0)
+    gi = jnp.arange(4, dtype=jnp.int32)
+    state = CSR.state_from_tuples(source, gi,
+                                  jnp.zeros((4, ns), jnp.float32),
+                                  residual=env_lib.residual_mode("mvc"),
+                                  candidate_fn=env_lib.candidate_rule("mvc"))
+    loss = np.nan
+    for _ in range(5):
+        es, state, _a, _r, _d, loss_d = fused(es, state, source, gi)
+        loss = float(loss_d)
+    assert np.isfinite(loss)
+
+
+# ---------------------------------------------------------------------------
+# Guard rails.
+# ---------------------------------------------------------------------------
+
+def test_csr_spatial_sp_gt_1_fails_fast(params):
+    adj = _adj_batch(b=2, n=16)
+    with pytest.raises(ValueError, match="does not support spatial"):
+        solve(params, adj, num_layers=2, rep="csr", spatial=(1, 2))
+
+
+@pytest.mark.slow
+def test_paper_regime_smoke_solve_100k(params):
+    """N=100k BA(d=10) end-to-end fused solve through the csr backend:
+    finite, feasible (every edge covered) and edge-proportional state."""
+    n = 100_000
+    indptr, indices = cached_ba_csr(n, d=10, seed=0)
+    g = csr_batch_from_arrays(indptr, indices)
+    res = solve(params, g, num_layers=2, multi_node=True, rep="csr",
+                problem="mvc", engine="device", max_d=n // 16)
+    sol = res.solution[0]
+    rid = np.repeat(np.arange(n), np.diff(indptr))
+    assert ((sol[rid] > 0.5) | (sol[indices] > 0.5)).all(), "uncovered edge"
+    assert res.policy_evals < 200
+    st = CSR.init_state(g)
+    assert CSR.state_bytes(st) < 5 * n * int(np.diff(indptr).max()) + 8 * n
