@@ -16,9 +16,16 @@ import numpy as np
 OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 
-def save(name: str, obj) -> None:
+def save(name: str, obj, quick: bool = False) -> None:
+    """Write a benchmark's JSON artifact under experiments/bench/.
+
+    Quick (CI-smoke) runs land in ``<name>_quick.json`` (gitignored) so
+    they can never clobber the committed full-run artifacts that carry
+    the repo's acceptance claims (DESIGN.md §5.2/§13, ROADMAP exit bars).
+    """
     OUT.mkdir(parents=True, exist_ok=True)
-    (OUT / f"{name}.json").write_text(json.dumps(obj, indent=1))
+    stem = f"{name}_quick" if quick else name
+    (OUT / f"{stem}.json").write_text(json.dumps(obj, indent=1))
 
 
 def timed(fn, *args, repeat: int = 3, **kw):

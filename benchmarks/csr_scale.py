@@ -124,7 +124,7 @@ def run(quick: bool = False):
                  f"({cover / n:.3f}N) in {solve_s:.1f}s"))
 
     save("csr_scale", {"embed_dim": k, "ba_d": BA_D, "sweep": points,
-                       "solve": solve_rec})
+                       "solve": solve_rec}, quick=quick)
     return rows
 
 

@@ -61,5 +61,5 @@ def run(quick: bool = False):
     rows.append(("replay_per_tuple_bytes", 0.0,
                  f"actual {actual:.0f}B model {model}B dense-adj would be "
                  f"{4*n*n/1e6:.0f}MB"))
-    save("efficiency_model", results)
+    save("efficiency_model", results, quick=quick)
     return rows

@@ -53,5 +53,5 @@ def run(n: int = 40, steps: int = 400, threshold: float = 1.2,
         rows.append((f"gd_iterations_tau{tau}", 0.0,
                      f"reach<= {threshold} at {reach} tail_std {osc:.4f} "
                      f"final {curve[-1]:.3f}"))
-    save("gd_iterations", results)
+    save("gd_iterations", results, quick=quick)
     return rows

@@ -64,7 +64,7 @@ def run(quick: bool = False):
     results = {"config": {"n": n, "batch": batch, "repeats": repeats,
                           "embed_dim": 16, "quick": quick},
                "p1": _measure_grid(n, batch, repeats)}
-    save("inference_step_scaling", results)
+    save("inference_step_scaling", results, quick=quick)
     rows = []
     for name, r in results["p1"].items():
         rows.append((

@@ -133,7 +133,7 @@ def run(quick: bool = False):
                  f"of dense-causal FLOPs"))
     results["swa"] = {"dense_s": dt_dense,
                       "flop_fraction": flops_win / flops_dense}
-    save("kernel_bench", results)
+    save("kernel_bench", results, quick=quick)
 
     # the acceptance claim: fused beats the unfused chain per eval on
     # BOTH backends — fail the bench (and bench-smoke CI) if it rots

@@ -72,5 +72,5 @@ def run(steps: int = 600, eval_every: int = 50, quick: bool = False,
         rows.append((f"learning_speed_{kind}_best", 0.0,
                      f"best ratio20 across seeds {best:.3f} "
                      f"(paper: ~1.1)"))
-    save("learning_speed", results)
+    save("learning_speed", results, quick=quick)
     return rows

@@ -210,7 +210,7 @@ def run(quick: bool = False):
         else:                              # record, don't hide, failures
             results[key] = {"error": child.stderr[-1000:]}
 
-    save("mesh_scaling", results)
+    save("mesh_scaling", results, quick=quick)
     failed = [f"{dp}x{sp}" for dp, sp in MESHES
               if "error" in results[f"{dp}x{sp}"]]
     if failed:

@@ -45,5 +45,5 @@ def run(sizes=(375, 750, 1500), quick: bool = False):
         rows.append((f"multinode_n{n}", td * 1e6,
                      f"speedup {t1/td:.2f}x evals {r1.policy_evals}->"
                      f"{rd.policy_evals} quality {quality:.3f}"))
-    save("multinode_selection", results)
+    save("multinode_selection", results, quick=quick)
     return rows

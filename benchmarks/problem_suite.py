@@ -100,7 +100,7 @@ def run(quick: bool = False):
             f"{r['sense']} ratio {r['quality_ratio_vs_greedy']:.3f} "
             f"(RL {r['rl_mean']:.1f} vs greedy {r['greedy_mean']:.1f}) "
             f"{r['policy_evals']} evals"))
-    save("problem_suite", results)
+    save("problem_suite", results, quick=quick)
     return rows
 
 

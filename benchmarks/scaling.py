@@ -81,5 +81,5 @@ def run(quick: bool = False):
         rows.append((f"scaling_collective_bytes_p{p}", 0.0,
                      f"embed AR {cb['embed_allreduce_bytes']/1e6:.1f}MB "
                      f"scores AG {cb['score_allgather_bytes']/1e6:.1f}MB"))
-    save("scaling", results)
+    save("scaling", results, quick=quick)
     return rows

@@ -90,7 +90,7 @@ def run(quick: bool = False):
             f"sparse/csr bytes = {per_rho['sparse_over_csr_bytes']:.2f}x"))
         results[f"rho_{rho}"] = per_rho
 
-    save("sparse_vs_dense", results)
+    save("sparse_vs_dense", results, quick=quick)
     paper = results["rho_0.0156"]
     if paper["dense_over_sparse_eval"] <= 1.0:
         # acceptance claim: at paper-regime density the sparse rep wins

@@ -134,7 +134,7 @@ def run(quick: bool = False):
     else:                                  # record, don't hide, P=2 failures
         results["p2"] = {"error": child.stderr[-1000:]}
 
-    save("train_step_scaling", results)
+    save("train_step_scaling", results, quick=quick)
     rows = []
     for pname in ("p1", "p2"):
         grid = results[pname]
