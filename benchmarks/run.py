@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
   §8/§9  train_step_scaling / inference_step_scaling (fused engines)
   §10    mesh_scaling (2-D (data, graph) mesh: time + per-device bytes)
   §11    problem_suite (per-env quality vs greedy + per-eval time)
+  §14    serving_latency (open-loop p50/p99 + goodput, sync vs async)
 """
 from __future__ import annotations
 
@@ -29,8 +30,8 @@ def main() -> None:
     from . import (learning_speed, multinode_selection, gd_iterations,
                    scaling, efficiency_model, kernel_bench,
                    roofline_summary, sparse_vs_dense, csr_scale,
-                   train_step_scaling,
-                   inference_step_scaling, mesh_scaling, problem_suite)
+                   train_step_scaling, inference_step_scaling,
+                   mesh_scaling, problem_suite, serving_latency)
     modules = {
         "learning_speed": learning_speed,
         "multinode_selection": multinode_selection,
@@ -45,6 +46,7 @@ def main() -> None:
         "inference_step_scaling": inference_step_scaling,
         "mesh_scaling": mesh_scaling,
         "problem_suite": problem_suite,
+        "serving_latency": serving_latency,
     }
     if args.only:
         keep = set(args.only.split(","))

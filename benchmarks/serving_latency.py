@@ -1,0 +1,167 @@
+"""Serving tail-latency benchmark: sync drain vs async SLO-aware
+continuous batching under open-loop Poisson load (DESIGN.md §14).
+
+The paper's parallel-inference result is a throughput story; the
+ROADMAP's "millions of users" target is a latency-DISTRIBUTION story.
+This benchmark makes it a measured, regression-guarded quantity:
+
+1. calibrate the service's sustainable throughput (burst-serve a warmed
+   request mix, requests/second of wall time — planning and padding
+   overheads included, unlike the raw device solve time);
+2. sweep ≥3 offered loads around that capacity (below, at, and well past
+   the knee), driving the SAME seeded workload through both serving
+   modes (`repro.serving.loadgen`):
+   - sync  — `submit()` at arrival times + continuous `drain()` (batch
+     mode at its best, no deadline awareness, unbounded queue);
+   - async — `submit_async()` against the deadline scheduler: EDF +
+     anti-starvation batching, partial dispatch after max_wait, and a
+     deadline-sized admission bound that sheds what cannot be served
+     on time;
+3. report p50/p99 latency and goodput (on-deadline completions per
+   second of wall time) per point.
+
+Hard guards (RuntimeError → CI failure):
+- ahead-of-time ``warmup()`` must leave ``stats.compiles == 0`` through
+  every measured traffic window — the zero-cold-compile acceptance
+  contract;
+- at the highest offered load the async path must WIN goodput: admission
+  control + deadline scheduling exist precisely to beat the sync queue's
+  unbounded latency at overload, so if that stops being true the serving
+  layer has rotted.
+
+JSON → experiments/bench/serving_latency.json.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import save
+
+LOAD_MULTS = (0.6, 1.2, 2.5)        # below / at / past the knee
+
+
+def _fresh_service(params, cfg, buckets, problems, *, max_batch,
+                   **kw):
+    from repro.serving import GraphSolverService
+    svc = GraphSolverService(params, cfg, max_batch=max_batch, **kw)
+    svc.warmup(buckets, problems)
+    return svc
+
+
+def run(quick: bool = False):
+    import jax
+    import numpy as np
+    from repro.core import PolicyConfig, init_policy
+    from repro.core.graphs import erdos_renyi
+    from repro.serving import bucket_nodes, make_workload, run_open_loop
+
+    # quick shrinks the request count, NOT the graph sizes: batch service
+    # time must dominate scheduling overhead for queueing to be real, and
+    # at small N the solve is so fast that only Python overhead remains
+    sizes = (96, 192)
+    reqs_per_point = 32 if quick else 96
+    max_batch = 4
+    problem = "mvc"
+    buckets = sorted({bucket_nodes(n) for n in sizes})
+    cfg = PolicyConfig(embed_dim=8 if quick else 16, num_layers=2)
+    params = init_policy(jax.random.key(0), cfg)
+
+    # -- capacity calibration: sustained burst throughput of the warmed
+    # sync path (includes planning/padding overheads, so it is the honest
+    # bound the offered loads are scaled against)
+    svc = _fresh_service(params, cfg, buckets, [problem],
+                         max_batch=max_batch)
+    rng = np.random.default_rng(0)
+    ncal = 16 if quick else 48
+    cal = [erdos_renyi(int(rng.choice(sizes)), 0.1, seed=int(s))
+           for s in rng.integers(0, 2 ** 31, ncal)]
+    t0 = time.perf_counter()
+    svc.serve(cal, problem=problem)
+    capacity_rps = ncal / (time.perf_counter() - t0)
+    batch_s = max_batch / capacity_rps
+
+    # SLO geometry derived from the measured capacity: the deadline is a
+    # few batch times (sub-capacity traffic meets it with room, overload
+    # cannot), max_wait a fraction of the deadline, and the admission
+    # bound is the queue depth the deadline can absorb.
+    deadline_ms = max(3.0 * batch_s * 1e3, 60.0)
+    max_wait_ms = deadline_ms / 5.0
+    queue_depth = max(2 * max_batch,
+                      int(0.8 * capacity_rps * deadline_ms / 1e3))
+
+    results = {
+        "sizes": list(sizes), "buckets": buckets, "max_batch": max_batch,
+        "embed_dim": cfg.embed_dim, "requests_per_point": reqs_per_point,
+        "capacity_rps": capacity_rps, "deadline_ms": deadline_ms,
+        "max_wait_ms": max_wait_ms, "queue_depth": queue_depth,
+        "load_mults": list(LOAD_MULTS), "points": [],
+    }
+    rows = [("serving_latency_capacity", batch_s * 1e6,
+             f"sustained {capacity_rps:.0f} rps, deadline "
+             f"{deadline_ms:.0f}ms, admission depth {queue_depth}")]
+
+    for mult in LOAD_MULTS:
+        offered = capacity_rps * mult
+        workload = make_workload(offered, reqs_per_point, sizes,
+                                 problem=problem, rho=0.1,
+                                 deadline_ms=deadline_ms, seed=7)
+        point = {"load_mult": mult, "offered_rps": offered}
+        for mode in ("sync", "async"):
+            kw = ({} if mode == "sync" else
+                  dict(max_wait_ms=max_wait_ms,
+                       max_queue_depth=queue_depth,
+                       default_deadline_ms=deadline_ms))
+            svc = _fresh_service(params, cfg, buckets, [problem],
+                                 max_batch=max_batch, **kw)
+            report = run_open_loop(svc, workload, mode=mode)
+            svc.close()
+            if svc.stats.compiles != 0:
+                # acceptance contract: warmup() pre-compiled every bucket,
+                # so the measured traffic window must be compile-free
+                raise RuntimeError(
+                    f"{svc.stats.compiles} request-path compiles during "
+                    f"measured {mode} traffic — warmup() no longer covers "
+                    "the bucket set")
+            point[mode] = report.as_dict()
+            point[mode]["stats"] = svc.stats.as_dict()
+            rows.append((
+                f"serving_latency_{mode}_x{mult}",
+                report.p99_ms * 1e3,
+                f"offered {offered:.0f}rps p50 {report.p50_ms:.0f}ms "
+                f"p99 {report.p99_ms:.0f}ms goodput "
+                f"{report.goodput_rps:.0f}rps on-time "
+                f"{report.on_time}/{report.submitted} "
+                f"shed {report.rejected}"))
+        results["points"].append(point)
+
+    knee = results["points"][-1]
+    margin = knee["async"]["goodput_rps"] / max(knee["sync"]["goodput_rps"],
+                                                1e-9)
+    results["async_goodput_margin_at_knee"] = margin
+    results["zero_compiles_under_traffic"] = True
+    rows.append(("serving_latency_knee", 0.0,
+                 f"x{knee['load_mult']} overload: async/sync goodput "
+                 f"= {margin:.2f}x"))
+    save("serving_latency", results, quick=quick)
+    if margin <= 1.0:
+        # acceptance claim: past the knee, deadline scheduling + admission
+        # control must beat the unbounded sync queue on goodput.
+        raise RuntimeError(
+            "async serving no longer wins goodput at the highest offered "
+            f"load (async/sync = {margin:.2f}x at "
+            f"{knee['offered_rps']:.0f} rps)")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=args.quick):
+        print(f'{name},{us:.1f},"{derived}"', flush=True)
+
+
+if __name__ == "__main__":
+    main()

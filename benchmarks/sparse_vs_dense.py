@@ -75,6 +75,44 @@ def run(quick: bool = False):
             rows.append((f"sparse_vs_dense_{name}_n{n}_rho{rho}", dt * 1e6,
                          f"state {sb/1e6:.2f}MB per-eval {dt*1e3:.1f}ms"))
 
+        # ROADMAP 1a before/after: the CSR layer aggregation moved from a
+        # trailing-axis scatter-add to a sorted segment-sum over the
+        # CSR-ordered row ids (core/s2v_csr.py).  Time both formulations
+        # on this graph's real edge structure at the layer's (B, K, E)
+        # operand shape; they are bit-identical, only the lowering differs.
+        import jax.numpy as jnp
+        from repro.core.graphs import csr_row_ids
+        from repro.core.s2v_csr import _segment_rows
+        g = get_rep("csr").init_state(adj)
+        e = g.indices.shape[1]
+        row_ids = csr_row_ids(g.indptr, e)
+        vals = jnp.asarray(
+            __import__("numpy").random.default_rng(0)
+            .standard_normal((adj.shape[0], k, e)), jnp.float32)
+
+        @jax.jit
+        def agg_scatter(wb, rb):
+            return jax.vmap(
+                lambda w, r: jnp.zeros((k, n), jnp.float32)
+                .at[:, r].add(w))(wb, rb)
+
+        agg_sorted = jax.jit(lambda wb, rb: _segment_rows(wb, rb, n))
+        seg = {}
+        for tag, fn in (("scatter", agg_scatter), ("sorted", agg_sorted)):
+            jax.block_until_ready(fn(vals, row_ids))
+            t0 = time.perf_counter()
+            for _ in range(max(evals, 3)):
+                out = fn(vals, row_ids)
+            jax.block_until_ready(out)
+            seg[f"{tag}_s"] = (time.perf_counter() - t0) / max(evals, 3)
+        seg["speedup"] = seg["scatter_s"] / seg["sorted_s"]
+        per_rho["csr"]["segment_sum"] = seg
+        rows.append((f"sparse_vs_dense_csr_segsum_n{n}_rho{rho}",
+                     seg["sorted_s"] * 1e6,
+                     f"sorted segment-sum {seg['sorted_s']*1e3:.2f}ms vs "
+                     f"scatter {seg['scatter_s']*1e3:.2f}ms "
+                     f"({seg['speedup']:.2f}x)"))
+
         per_rho["dense_over_sparse_bytes"] = (
             per_rho["dense"]["state_bytes"]
             / per_rho["sparse"]["state_bytes"])

@@ -1,9 +1,15 @@
-"""End-to-end graph-solver service demo (DESIGN.md §9): train a small MVC
-policy, checkpoint it, then serve a heterogeneous-size request stream
+"""End-to-end graph-solver service demo (DESIGN.md §9/§14): train a small
+MVC policy, checkpoint it, then serve a heterogeneous-size request stream
 through the continuous-batching layer + fused device-resident inference
 engine — the inference mirror of `examples/train_mvc_agent.py`.
 
+`--mode async` serves the same stream through the SLO-aware path instead:
+AOT `warmup()` takes every compile off the request path, each request is a
+`submit_async` future with a deadline, and the per-request timestamps the
+service stamps become the printed latency percentiles.
+
     PYTHONPATH=src python examples/solve_service.py --steps 150
+    PYTHONPATH=src python examples/solve_service.py --mode async
 """
 import argparse
 import tempfile
@@ -26,6 +32,10 @@ def main():
                     help="node counts the request stream mixes")
     ap.add_argument("--rep", choices=["dense", "sparse", "csr"], default="dense")
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--mode", choices=["sync", "async"], default="sync",
+                    help="async: warmup + submit_async futures with a "
+                         "deadline, printing latency percentiles")
+    ap.add_argument("--deadline-ms", type=float, default=500.0)
     ap.add_argument("--ckpt-dir", default=None,
                     help="default: a temporary directory")
     args = ap.parse_args()
@@ -51,7 +61,16 @@ def main():
     rng = np.random.default_rng(7)
     adjs = [erdos_renyi(int(rng.choice(sizes)), 0.2, seed=100 + i)
             for i in range(args.requests)]
-    responses = svc.serve(adjs)
+    if args.mode == "async":
+        info = svc.warmup(sizes)
+        print(f"warmed {len(info['compiled'])} executables in "
+              f"{info['seconds']:.2f}s; request path compiles == 0")
+        futures = [svc.submit_async(a, deadline_ms=args.deadline_ms)
+                   for a in adjs]
+        responses = [f.result() for f in futures]
+        svc.close()
+    else:
+        responses = svc.serve(adjs)
 
     greedy = [int(greedy_mvc(a).sum()) for a in adjs]
     for r, g in zip(responses, greedy):
@@ -61,7 +80,14 @@ def main():
     s = svc.stats
     print(f"{s.requests} requests, {len(set(len(r.solution) for r in responses))} "
           f"distinct sizes -> {s.batches} batches / {s.compiles} compiles "
-          f"({s.cache_hits} cache hits), {s.solve_seconds:.2f}s device solve")
+          f"({s.cache_hits} cache hits), {s.compile_seconds:.2f}s compile + "
+          f"{s.solve_seconds:.2f}s device solve")
+    if args.mode == "async":
+        lat = np.asarray(sorted(r.latency_s * 1e3 for r in responses))
+        print(f"latency: p50 {np.percentile(lat, 50):.1f}ms "
+              f"p99 {np.percentile(lat, 99):.1f}ms "
+              f"(deadline {args.deadline_ms:.0f}ms, "
+              f"{int((lat <= args.deadline_ms).sum())}/{len(lat)} on time)")
 
 
 if __name__ == "__main__":

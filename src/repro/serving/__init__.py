@@ -1,7 +1,12 @@
-"""Graph-solver serving layer (DESIGN.md §9): request queue, power-of-two
-size bucketing + padding, per-bucket compiled-step cache, and batched
-dispatch to the fused device-resident inference engine."""
-from .bucketing import (MIN_BUCKET, BatchPlan, bucket_nodes, pad_adjacency,
-                        plan_batches, unpad_solution)
-from .service import (GraphSolverService, ServiceStats, SolveRequest,
-                      SolveResponse)
+"""Graph-solver serving layer (DESIGN.md §9, §14): request queue,
+power-of-two size bucketing + padding, per-bucket compiled-step cache
+with ahead-of-time ``warmup``, sync batched dispatch AND an async
+SLO-aware path — deadline scheduler, continuous batching, admission
+control — plus the open-loop Poisson load generator that measures it."""
+from .bucketing import (MIN_BUCKET, BatchPlan, bucket_nodes, build_plan,
+                        pad_adjacency, plan_batches, unpad_solution)
+from .loadgen import LoadReport, Workload, make_workload, run_open_loop
+from .scheduler import DeadlineScheduler, PendingRequest
+from .service import (GraphSolverService, ServiceOverloaded, ServiceStats,
+                      SolveFuture, SolveRequest, SolveResponse,
+                      enable_compile_cache)

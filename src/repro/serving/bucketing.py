@@ -56,12 +56,34 @@ def pad_adjacency(adj: np.ndarray, nb: int) -> np.ndarray:
 @dataclasses.dataclass(frozen=True)
 class BatchPlan:
     """One dispatch to the fused engine: a (batch, nb, nb) padded stack plus
-    the request ids and true sizes of the occupied rows."""
+    the request ids, true sizes, and submission timestamps of the occupied
+    rows (the latter feed the per-request latency accounting,
+    DESIGN.md §14)."""
     nb: int                    # bucket node count (power of two)
     problem: str
     adj: np.ndarray            # (batch, nb, nb) float32, zero rows unused
     request_ids: Tuple[int, ...]
     sizes: Tuple[int, ...]     # true node counts per occupied row
+    enqueue_ts: Tuple[float, ...] = ()   # submit timestamps per occupied row
+
+
+def build_plan(requests: Sequence, nb: int, problem: str,
+               rows: int) -> BatchPlan:
+    """One BatchPlan from an explicit request chunk — the async
+    scheduler's dispatch path (the chunk was already chosen by
+    ``DeadlineScheduler``; it may underfill the batch, unused rows are
+    empty born-done graphs exactly as in the sync path)."""
+    if len(requests) > rows:
+        raise ValueError(f"{len(requests)} requests exceed the "
+                         f"{rows}-row batch")
+    adj = np.zeros((rows, nb, nb), np.float32)
+    for row, req in enumerate(requests):
+        adj[row] = pad_adjacency(req.adj, nb)
+    return BatchPlan(
+        nb=nb, problem=problem, adj=adj,
+        request_ids=tuple(r.id for r in requests),
+        sizes=tuple(r.n for r in requests),
+        enqueue_ts=tuple(getattr(r, "enqueue_t", 0.0) for r in requests))
 
 
 def plan_batches(requests: Sequence, max_batch: int,
@@ -84,14 +106,8 @@ def plan_batches(requests: Sequence, max_batch: int,
     for (nb, problem), reqs in sorted(groups.items(),
                                       key=lambda kv: kv[0]):
         for i in range(0, len(reqs), max_batch):
-            chunk = reqs[i:i + max_batch]
-            adj = np.zeros((max_batch, nb, nb), np.float32)
-            for row, req in enumerate(chunk):
-                adj[row] = pad_adjacency(req.adj, nb)
-            plans.append(BatchPlan(
-                nb=nb, problem=problem, adj=adj,
-                request_ids=tuple(r.id for r in chunk),
-                sizes=tuple(r.n for r in chunk)))
+            plans.append(build_plan(reqs[i:i + max_batch], nb, problem,
+                                    max_batch))
     return plans
 
 

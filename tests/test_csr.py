@@ -26,8 +26,9 @@ from repro.core.graphs import (CsrGraphBatch, CsrGraphState,
                                barabasi_albert_edges, cached_ba_csr,
                                csr_batch_from_arrays, csr_batch_from_dense,
                                csr_batch_to_dense, csr_from_edges,
-                               csr_row_ids)
-from repro.core.s2v_csr import _csr_layer_hw, _csr_layer_jnp
+                               csr_row_ids, csr_segment_sum,
+                               csr_segment_sum_scatter)
+from repro.core.s2v_csr import _csr_layer_hw, _csr_layer_jnp, _segment_rows
 from repro.kernels import ops
 
 RNG = np.random.default_rng(11)
@@ -58,6 +59,28 @@ def test_csr_max_edges_too_small_raises():
     true_e = int(np.asarray(adj).sum(axis=(1, 2)).max())
     with pytest.raises(ValueError, match="refusing to silently drop"):
         csr_batch_from_dense(adj, max_edges=true_e - 1)
+
+
+def test_sorted_segment_sum_matches_scatter():
+    """csr_segment_sum moved to a sorted segment-sum (CSR row ids are
+    non-decreasing by construction); it must stay bit-identical to the
+    scatter-add formulation it replaced, padded sentinel slots included."""
+    adj = _adj_batch(b=2, n=16)
+    g = csr_batch_from_dense(adj, max_edges=200)   # force padded slots
+    e = g.indices.shape[1]
+    rid = csr_row_ids(g.indptr, e)
+    vals = jnp.asarray(RNG.standard_normal((2, e)), jnp.float32)
+    vals = vals * g.edge_mask                      # padded slots contribute 0
+    got = csr_segment_sum(vals, rid, 16)
+    want = csr_segment_sum_scatter(vals, rid, 16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the (B, K, E) layer-shaped helper used inside _csr_layer_jnp
+    wb = jnp.asarray(RNG.standard_normal((2, 8, e)), jnp.float32)
+    wb = wb * g.edge_mask[:, None, :]
+    got3 = _segment_rows(wb, rid, 16)
+    want3 = jax.vmap(lambda w, r: jnp.zeros((8, 16), jnp.float32)
+                     .at[:, r].add(w))(wb, rid)
+    np.testing.assert_array_equal(np.asarray(got3), np.asarray(want3))
 
 
 def test_row_ids_and_padding_sentinels():
